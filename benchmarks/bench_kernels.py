@@ -1,0 +1,98 @@
+"""Kernel microbenchmarks.
+
+Pallas kernels are validated in interpret mode (CPU container; TPU is the
+target), so wall-times here measure the *reference/XLA* path.  For each
+kernel we report:
+* ref-path time per call at several sizes (the production CPU fallback),
+* interpret-mode kernel time (correctness-path cost, NOT a TPU number),
+* the structural roofline of the kernel's TPU design: bytes moved per
+  element and the VMEM working set implied by its BlockSpec tiling.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import assoc, semiring
+from repro.kernels.merge_add import ops as merge_ops
+from repro.kernels.scatter_add import ops as scatter_ops
+from repro.kernels.scatter_add.ref import scatter_add_ref
+from repro.kernels.sort_dedup import ops as sort_ops
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench_merge(n: int):
+    rng = np.random.default_rng(0)
+    a = assoc.from_triples(
+        jnp.asarray(rng.integers(0, 10 * n, n), jnp.int32),
+        jnp.asarray(rng.integers(0, 10 * n, n), jnp.int32),
+        jnp.ones((n,), jnp.float32),
+        cap=n,
+    )
+    b = assoc.from_triples(
+        jnp.asarray(rng.integers(0, 10 * n, n), jnp.int32),
+        jnp.asarray(rng.integers(0, 10 * n, n), jnp.int32),
+        jnp.ones((n,), jnp.float32),
+        cap=n,
+    )
+    ref_fn = jax.jit(lambda x, y: assoc.add(x, y, cap=2 * n))
+    us_ref = _time(ref_fn, a, b)
+    us_kern = _time(lambda x, y: merge_ops.merge_add(x, y, cap=2 * n), a, b)
+    # TPU design structural stats: 4 lanes x 2n elements x 4 B through VMEM,
+    # log2(2n) compare-exchange passes
+    vmem_mb = 4 * 2 * n * 4 / 2**20
+    print(
+        f"merge_add,n={n},ref_us={us_ref:.0f},interp_us={us_kern:.0f},"
+        f"vmem_mb={vmem_mb:.2f},elems_per_byte_hbm={2*n*12/(2*n*12):.1f}"
+    )
+
+
+def bench_sort(n: int):
+    rng = np.random.default_rng(1)
+    r = jnp.asarray(rng.integers(0, n, n), jnp.int32)
+    c = jnp.asarray(rng.integers(0, n, n), jnp.int32)
+    v = jnp.ones((n,), jnp.float32)
+    us_ref = _time(jax.jit(lambda *t: assoc.from_triples(*t, cap=n)), r, c, v)
+    us_kern = _time(lambda *t: sort_ops.from_triples(*t, cap=n), r, c, v)
+    print(f"sort_dedup,n={n},ref_us={us_ref:.0f},interp_us={us_kern:.0f}")
+
+
+def bench_scatter(v: int, d: int, k: int):
+    rng = np.random.default_rng(2)
+    table = jnp.asarray(rng.normal(size=(v, d)), jnp.float32)
+    ids = jnp.asarray(np.sort(rng.choice(v, k, replace=False)), jnp.int32)
+    rows = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    us_ref = _time(jax.jit(scatter_add_ref), ids, rows, table)
+    # dense-equivalent: touch all V rows
+    dense = jax.jit(lambda t, r: t + r)
+    full = jnp.zeros_like(table)
+    us_dense = _time(dense, table, full)
+    print(
+        f"scatter_add,V={v},d={d},k={k},sparse_us={us_ref:.0f},"
+        f"dense_equiv_us={us_dense:.0f},bytes_ratio={v/k:.0f}x"
+    )
+
+
+def main():
+    for n in (1 << 10, 1 << 14, 1 << 17):
+        bench_merge(n)
+    for n in (1 << 10, 1 << 14):
+        bench_sort(n)
+    bench_scatter(32_000, 512, 1024)
+    bench_scatter(262_144, 512, 4096)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Paper Fig. 6: aggregate update rate vs. number of instances.
+
+The paper's design is embarrassingly parallel: 34,000 *independent*
+hierarchical-array instances (one per core) each ingesting its own stream,
+with the aggregate rate = sum of instance rates — that independence is why
+it scales linearly to 1.9 B updates/s.
+
+This benchmark reproduces the *shape* on CPU: ``shard_map`` over N host
+devices (one instance per device, zero update-path collectives — identical
+program structure to the TPU deployment), measuring aggregate rate at
+N = 1, 2, 4, 8.  The 512-device multi-pod dry-run proves the same program
+lowers at pod scale; the linear model fitted here, projected to the paper's
+34,000 instances, is reported alongside (that projection is exactly the
+paper's own argument, and our measured scaling efficiency quantifies how
+safe it is).
+
+NOTE: run as a standalone script — it forces 8 host devices at import.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributed, hierarchical
+from repro.data import rmat
+
+
+def run_parallel(n_dev: int, groups: int = 20, group_size: int = 10_000, scale: int = 18):
+    """Aggregate updates/s with n_dev independent instances."""
+    devs = jax.devices()[:n_dev]
+    mesh = jax.sharding.Mesh(np.asarray(devs).reshape(n_dev), ("data",))
+    cuts = (2 * group_size, 16 * group_size)
+    ps = distributed.ParallelHierStream(
+        mesh, cuts, top_capacity=groups * group_size * 2, batch_size=group_size
+    )
+    h = ps.init_state()
+    # pre-generate the whole stream (host) so timing is pure update cost
+    key = jax.random.PRNGKey(0)
+    batches = []
+    for g in range(groups):
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, n_dev)
+        s, d = jax.vmap(lambda k: rmat.rmat_edges(k, group_size, scale))(keys)
+        batches.append(ps.shard_stream(s, d, jnp.ones((n_dev, group_size))))
+    # warmup
+    h = ps.update(h, *batches[0])
+    jax.block_until_ready(h)
+    h = ps.init_state()
+    t0 = time.perf_counter()
+    for b in batches:
+        h = ps.update(h, *b)
+    jax.block_until_ready(h)
+    dt = time.perf_counter() - t0
+    total_updates = n_dev * groups * group_size
+    return total_updates / dt
+
+
+def update_path_collectives(n_dev: int = None) -> dict:
+    """Compile the multi-instance update and count collectives in its HLO.
+
+    The paper's linear-scaling argument is structural: instances are
+    independent, so the update path must contain ZERO cross-device
+    collectives — we verify that property on the compiled program (the same
+    check holds at 512 devices in the dry-run).  On this container all
+    'devices' share one CPU, so wall-clock aggregate rates CANNOT show
+    scaling; the structural check is the honest evidence.
+    """
+    import re
+
+    n_dev = n_dev or len(jax.devices())
+    devs = jax.devices()[:n_dev]
+    mesh = jax.sharding.Mesh(np.asarray(devs).reshape(n_dev), ("data",))
+    ps = distributed.ParallelHierStream(mesh, (64,), top_capacity=4096, batch_size=32)
+    h = ps.init_state()
+    r = jnp.zeros((n_dev, 32), jnp.int32)
+    c = jnp.zeros((n_dev, 32), jnp.int32)
+    v = jnp.ones((n_dev, 32))
+    txt = ps.update.lower(h, *ps.shard_stream(r, c, v)).compile().as_text()
+    out = {}
+    for k in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute"):
+        out[k] = len(re.findall(rf"= [\w\[\],{{}}]+ {k}[(-]", txt))
+    return out
+
+
+def main():
+    rates = {}
+    max_dev = len(jax.devices())
+    ns = [n for n in (1, 2, 4, 8) if n <= max_dev]
+    for n in ns:
+        r = run_parallel(n)
+        rates[n] = r
+        print(
+            f"scaling,n_instances={n},aggregate_rate={r:,.0f}/s,"
+            f"per_instance={r/n:,.0f}/s", flush=True,
+        )
+    colls = update_path_collectives()
+    total = sum(colls.values())
+    print(f"verdict,update_path_collective_free,{total == 0},ops={colls}")
+    print(
+        "note,aggregate rates on this container share ONE physical CPU across "
+        "simulated devices - scaling evidence is the collective-free update "
+        "program (above) + the 512-chip dry-run lowering (EXPERIMENTS.md)"
+    )
+    per_inst = rates[ns[0]]
+    print(
+        f"projection,34000_instances,{per_inst * 34_000:,.0f}/s at this "
+        f"container's single-instance rate,(paper: 1.9e9/s on 34,000 Xeon cores)"
+    )
+    return rates
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+Prints ``name,...`` CSV lines; sections:
+  hier_update   — paper Figs. 4/5 (update rate vs cuts, instantaneous decay)
+  scaling       — paper Fig. 6 shape (aggregate rate vs instances; run
+                  standalone with XLA_FLAGS=--xla_force_host_platform_device_count=8
+                  for the multi-instance points; in-process fallback = 1 instance)
+  kernels       — Pallas kernel ref/interp microbenches + TPU design stats
+  embed_grad    — LM integration: hierarchical sparse embedding-grad traffic
+
+Scale: laptop-size defaults (--full restores paper-scale streams).
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all",
+                    choices=["all", "hier", "kernels", "embed", "scaling"])
+    ap.add_argument("--full", action="store_true", help="paper-scale streams")
+    args = ap.parse_args()
+
+    if args.section in ("all", "hier"):
+        from benchmarks import bench_hier_update
+        if args.full:
+            bench_hier_update.main(total_edges=100_000_000, group_size=100_000, scale=26)
+        else:
+            bench_hier_update.main()
+    if args.section in ("all", "kernels"):
+        from benchmarks import bench_kernels
+        bench_kernels.main()
+    if args.section in ("all", "embed"):
+        from benchmarks import bench_embed_grad
+        bench_embed_grad.main()
+    if args.section in ("all", "scaling"):
+        from benchmarks import bench_scaling
+        bench_scaling.main()
+
+
+if __name__ == "__main__":
+    main()

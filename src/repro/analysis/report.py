@@ -1,0 +1,66 @@
+"""Render the dry-run result JSONs into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ARCH_ORDER = [
+    "qwen2_0_5b", "whisper_tiny", "mamba2_1_3b", "paligemma_3b",
+    "h2o_danube3_4b", "granite_3_8b", "phi3_5_moe", "gemma3_27b",
+    "jamba_1_5_large", "deepseek_v3",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(outdir: str, mesh: str) -> List[dict]:
+    rows = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            f = os.path.join(outdir, f"{arch}x{shape}x{mesh}.json")
+            if os.path.exists(f):
+                rows.append(json.load(open(f)))
+    return rows
+
+
+def fmt_ms(x):
+    return f"{1e3 * x:.2f}"
+
+
+def table(outdir: str = "experiments/dryrun", mesh: str = "single") -> str:
+    rows = load(outdir, mesh)
+    out = [
+        "| arch | shape | status | t_comp ms | t_mem ms | t_coll ms | bottleneck "
+        "| rMFU | useful | GB/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in rows:
+        if d["status"] == "skipped":
+            out.append(
+                f"| {d['arch']} | {d['shape']} | SKIP (no sub-quadratic path) "
+                f"| — | — | — | — | — | — | — | — |"
+            )
+            continue
+        if d["status"] != "compiled":
+            out.append(f"| {d['arch']} | {d['shape']} | **{d['status']}** "
+                       f"| — | — | — | — | — | — | — | — |")
+            continue
+        r = d["roofline"]
+        mem = d.get("memory", {})
+        args_gb = mem.get("argument_bytes", 0) / 2**30
+        out.append(
+            f"| {d['arch']} | {d['shape']} | ok | {fmt_ms(r['t_compute_s'])} "
+            f"| {fmt_ms(r['t_memory_s'])} | {fmt_ms(r['t_collective_s'])} "
+            f"| {r['bottleneck']} | {r['roofline_mfu']:.3f} "
+            f"| {r['useful_flops_ratio']:.2f} | {args_gb:.1f} "
+            f"| {d.get('compile_s', 0):.0f} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    print(table(mesh=mesh))

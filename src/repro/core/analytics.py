@@ -1,0 +1,105 @@
+"""Network analytics on associative arrays — the paper's application layer.
+
+"In a real analysis application, each process would also compute various
+network statistics on each of the streams as they are updated" (Section V).
+These are those statistics, written as associative-array algebra (Section
+II's point: the SAME three operations express database queries AND graph
+analytics):
+
+* degrees            — row/col reductions
+* top-k heavy hitters — degree + top_k
+* triangle counts    — tr(A^3)/6 via masked semiring matmul (Burkhardt),
+                       here the hypersparse COO formulation
+* common-neighbour / Jaccard similarity between vertex pairs
+* k-step reachability — repeated ⊕.⊗ with the boolean-like max.min semiring
+
+All static-shape: outputs carry explicit capacities like everything else in
+:mod:`repro.core`.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import assoc
+from .assoc import Assoc, PAD
+from .semiring import MAX_MIN, PLUS_TIMES, Semiring
+
+
+def degrees(a: Assoc, cap: int | None = None) -> Tuple[Assoc, Assoc]:
+    """(out_degree, in_degree) as 1-D associative arrays keyed (vertex, 0)."""
+    return assoc.reduce_rows(a, cap), assoc.reduce_cols(a, cap)
+
+
+def top_k_vertices(deg: Assoc, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Heaviest-k vertices from a degree array: (ids [k], counts [k])."""
+    vals = jnp.where(deg.rows != PAD, deg.vals, -jnp.inf)
+    top_vals, idx = jax.lax.top_k(vals, k)
+    return deg.rows[idx], top_vals
+
+
+def undirected_view(a: Assoc, cap: int | None = None) -> Assoc:
+    """A (+) A^T with unit weights collapsed — the symmetric support."""
+    cap = cap or 2 * a.capacity
+    sym = assoc.add(a, assoc.transpose(a), cap=cap)
+    ones = jnp.where(sym.rows != PAD, 1.0, 0.0).astype(sym.vals.dtype)
+    return Assoc(sym.rows, sym.cols, ones, sym.nnz, sym.overflow)
+
+
+def triangle_count(
+    a: Assoc, cap_sq: int, max_fanout: int
+) -> jax.Array:
+    """Total triangles in the undirected simple graph supported by ``a``.
+
+    tr(A^3) / 6 computed hypersparsely: C = A (+).(x) A restricted to the
+    support of A (element-wise multiply), then sum(C) / 6.  ``cap_sq`` bounds
+    nnz(A^2) and ``max_fanout`` the join width, both explicit static-shape
+    contracts (DESIGN.md section 3.1).
+    """
+    sq = assoc.matmul(a, a, cap=cap_sq, max_fanout=max_fanout)
+    masked = assoc.elem_mul(sq, a, cap=cap_sq)
+    live = masked.rows != PAD
+    return jnp.where(live, masked.vals, 0.0).sum() / 6.0
+
+
+def _neighbor_set(a: Assoc, u: int, cap: int) -> Assoc:
+    """N(u) as a unit-weight row vector keyed (0, neighbour) — rebuilt via
+    from_triples so pad slots stay pads and sorted-unique holds."""
+    r = assoc.extract_row(a, u, cap)
+    live = r.rows != PAD
+    return assoc.from_triples(
+        jnp.zeros_like(r.rows), r.cols, jnp.ones_like(r.vals), cap, valid=live
+    )
+
+
+def common_neighbors(a: Assoc, u: int, v: int, cap: int) -> jax.Array:
+    """|N(u) ∩ N(v)| via row extraction + intersection."""
+    inter = assoc.elem_mul(
+        _neighbor_set(a, u, cap), _neighbor_set(a, v, cap), cap=cap
+    )
+    return inter.nnz.astype(jnp.float32)
+
+
+def jaccard(a: Assoc, u: int, v: int, cap: int) -> jax.Array:
+    """Jaccard similarity of neighbourhoods."""
+    ru = assoc.extract_row(a, u, cap)
+    rv = assoc.extract_row(a, v, cap)
+    inter = common_neighbors(a, u, v, cap)
+    union = ru.nnz + rv.nnz - inter
+    return inter / jnp.maximum(union, 1.0)
+
+
+def reachable_within(
+    a: Assoc, steps: int, cap: int, max_fanout: int
+) -> Assoc:
+    """k-step reachability closure via max.min semiring powers:
+    R_k = R_{k-1} (+) R_{k-1} A  (boolean algebra on [0, 1] weights)."""
+    ones = jnp.where(a.rows != PAD, 1.0, 0.0).astype(a.vals.dtype)
+    r = Assoc(a.rows, a.cols, ones, a.nnz, a.overflow)
+    base = r
+    for _ in range(steps - 1):
+        nxt = assoc.matmul(r, base, cap=cap, max_fanout=max_fanout, sr=MAX_MIN)
+        r = assoc.add(r, nxt, cap=cap, sr=MAX_MIN)
+    return r

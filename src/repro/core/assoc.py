@@ -1,0 +1,361 @@
+"""Static-shape hypersparse associative arrays (the paper's core object).
+
+An :class:`Assoc` stores the nonzero triples of a 2-D associative array
+``A : K1 x K2 -> V`` in sorted-COO form:
+
+* ``rows``/``cols`` — ``int32[cap]`` key pair, sorted lexicographically by
+  ``(row, col)``; dead slots are padded with ``PAD = INT32_MAX``.
+* ``vals`` — ``f32[cap]`` values; dead slots hold the semiring zero.
+* ``nnz`` — scalar count of live entries.
+
+Why static shapes: XLA (and the TPU target) cannot reallocate on device, so
+every array has a fixed *capacity* and a dynamic *count*, with all operations
+masked.  This is the one structural assumption changed from the paper's
+CPU/Matlab implementation (see DESIGN.md section 2); all algebraic semantics
+are preserved exactly.
+
+Keys are device-side ``int32`` pairs (IPv4 src/dst fit exactly; strings are
+dictionary-encoded host-side in :mod:`repro.data.dictionary`).  We deliberately
+avoid int64: JAX defaults to 32-bit and TPU vector lanes are 32-bit native.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .semiring import PLUS_TIMES, Semiring
+
+PAD = jnp.iinfo(jnp.int32).max  # sentinel key for dead slots (sorts last)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Assoc:
+    """Sorted-COO hypersparse associative array with static capacity."""
+
+    rows: jax.Array  # int32[cap]
+    cols: jax.Array  # int32[cap]
+    vals: jax.Array  # f32[cap]
+    nnz: jax.Array  # int32[]
+    overflow: jax.Array  # bool[] — sticky: some op exceeded an output capacity
+
+    @property
+    def capacity(self) -> int:
+        return self.rows.shape[0]
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"Assoc(cap={self.capacity})"
+
+
+# ---------------------------------------------------------------------------
+# construction
+# ---------------------------------------------------------------------------
+
+def empty(cap: int, sr: Semiring = PLUS_TIMES, dtype=jnp.float32) -> Assoc:
+    """An all-zero associative array with room for ``cap`` nonzeros."""
+    return Assoc(
+        rows=jnp.full((cap,), PAD, jnp.int32),
+        cols=jnp.full((cap,), PAD, jnp.int32),
+        vals=jnp.full((cap,), sr.zero, dtype),
+        nnz=jnp.zeros((), jnp.int32),
+        overflow=jnp.zeros((), jnp.bool_),
+    )
+
+
+def from_triples(
+    rows: jax.Array,
+    cols: jax.Array,
+    vals: jax.Array,
+    cap: int,
+    sr: Semiring = PLUS_TIMES,
+    valid: jax.Array | None = None,
+) -> Assoc:
+    """Build an Assoc from (possibly duplicated, unsorted) triples.
+
+    Duplicated keys are combined with ``sr.add`` — this is the paper's
+    ``A = Assoc(k1, k2, v)`` constructor semantics.  ``valid`` optionally
+    masks input slots (invalid slots are dropped).
+    """
+    rows = rows.astype(jnp.int32)
+    cols = cols.astype(jnp.int32)
+    if valid is not None:
+        rows = jnp.where(valid, rows, PAD)
+        cols = jnp.where(valid, cols, PAD)
+        vals = jnp.where(valid, vals, jnp.asarray(sr.zero, vals.dtype))
+    order = jnp.lexsort((cols, rows))
+    return _combine_sorted(rows[order], cols[order], vals[order], cap, sr)
+
+
+# ---------------------------------------------------------------------------
+# internal: combine runs of equal keys in a sorted triple list, then compact
+# ---------------------------------------------------------------------------
+
+def _combine_sorted(
+    rows: jax.Array, cols: jax.Array, vals: jax.Array, cap: int, sr: Semiring
+) -> Assoc:
+    """Given lexicographically sorted triples, fold duplicate keys with
+    ``sr.add`` and compact the survivors into a fresh Assoc of capacity
+    ``cap``.  PAD-keyed slots are dropped."""
+
+    def comb(left, right):
+        lr, lc, lv = left
+        rr, rc, rv = right
+        same = (lr == rr) & (lc == rc)
+        return rr, rc, jnp.where(same, sr.add(lv, rv), rv)
+
+    # Segmented fold: associative because equal keys are contiguous (sorted).
+    _, _, acc = lax.associative_scan(comb, (rows, cols, vals))
+    nxt_r = jnp.concatenate([rows[1:], jnp.full((1,), -1, jnp.int32)])
+    nxt_c = jnp.concatenate([cols[1:], jnp.full((1,), -1, jnp.int32)])
+    is_end = (rows != nxt_r) | (cols != nxt_c)  # last element of each key-run
+    keep = is_end & (rows != PAD)
+    return _compact(rows, cols, acc, keep, cap, sr)
+
+
+def _compact(rows, cols, vals, keep, cap: int, sr: Semiring) -> Assoc:
+    n_keep = keep.sum(dtype=jnp.int32)
+    pos = jnp.cumsum(keep, dtype=jnp.int32) - 1
+    pos = jnp.where(keep, pos, cap)  # out-of-range -> dropped by mode="drop"
+    out = empty(cap, sr, vals.dtype)
+    out_rows = out.rows.at[pos].set(rows, mode="drop")
+    out_cols = out.cols.at[pos].set(cols, mode="drop")
+    out_vals = out.vals.at[pos].set(vals, mode="drop")
+    return Assoc(
+        rows=out_rows,
+        cols=out_cols,
+        vals=out_vals,
+        nnz=jnp.minimum(n_keep, cap),
+        overflow=n_keep > cap,
+    )
+
+
+# ---------------------------------------------------------------------------
+# lexicographic binary search over (row, col) key pairs
+# ---------------------------------------------------------------------------
+
+def lex_searchsorted(
+    kr: jax.Array,
+    kc: jax.Array,
+    qr: jax.Array,
+    qc: jax.Array,
+    side: str = "left",
+) -> jax.Array:
+    """``jnp.searchsorted`` generalized to lexicographic (row, col) pairs.
+
+    ``kr``/``kc`` must be lexicographically sorted.  Vectorized binary search:
+    ``ceil(log2 n)`` rounds of gathered comparisons — no int64 packing needed.
+    """
+    n = kr.shape[0]
+    qr = jnp.asarray(qr, jnp.int32)
+    qc = jnp.asarray(qc, jnp.int32)
+    lo = jnp.zeros(qr.shape, jnp.int32)
+    hi = jnp.full(qr.shape, n, jnp.int32)
+    for _ in range(max(1, int(math.ceil(math.log2(max(n, 2)))) + 1)):
+        mid = (lo + hi) >> 1
+        mr = kr[mid]
+        mc = kc[mid]
+        if side == "left":
+            go_right = (mr < qr) | ((mr == qr) & (mc < qc))
+        else:
+            go_right = (mr < qr) | ((mr == qr) & (mc <= qc))
+        # guard: once converged (lo == hi), clamped gathers must not move lo
+        go_right = go_right & (mid < hi)
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, jnp.minimum(hi, mid))
+    return lo
+
+
+# ---------------------------------------------------------------------------
+# element-wise addition  (database union — the hierarchy's only required op)
+# ---------------------------------------------------------------------------
+
+def add(a: Assoc, b: Assoc, cap: int | None = None, sr: Semiring = PLUS_TIMES) -> Assoc:
+    """``C = A (+) B`` — element-wise semiring addition (table union).
+
+    Both inputs are sorted, so we merge by rank (two lex-searchsorted passes)
+    rather than re-sorting the concatenation: O((m+n) log(m+n)) comparisons
+    with a small constant, and the exact algorithm the Pallas ``merge_add``
+    kernel implements in VMEM tiles on TPU.
+    """
+    if cap is None:
+        cap = a.capacity + b.capacity
+    m, n = a.capacity, b.capacity
+    total = m + n
+    # merge-by-rank: stable positions for A's and B's elements in the merge.
+    pos_a = jnp.arange(m, dtype=jnp.int32) + lex_searchsorted(
+        b.rows, b.cols, a.rows, a.cols, side="left"
+    )
+    pos_b = jnp.arange(n, dtype=jnp.int32) + lex_searchsorted(
+        a.rows, a.cols, b.rows, b.cols, side="right"
+    )
+    rows = jnp.full((total,), PAD, jnp.int32)
+    cols = jnp.full((total,), PAD, jnp.int32)
+    vals = jnp.full((total,), sr.zero, a.vals.dtype)
+    rows = rows.at[pos_a].set(a.rows).at[pos_b].set(b.rows)
+    cols = cols.at[pos_a].set(a.cols).at[pos_b].set(b.cols)
+    vals = vals.at[pos_a].set(a.vals).at[pos_b].set(b.vals)
+    out = _combine_sorted(rows, cols, vals, cap, sr)
+    return dataclasses.replace(
+        out, overflow=out.overflow | a.overflow | b.overflow
+    )
+
+
+# ---------------------------------------------------------------------------
+# element-wise multiplication  (database intersection)
+# ---------------------------------------------------------------------------
+
+def elem_mul(
+    a: Assoc, b: Assoc, cap: int | None = None, sr: Semiring = PLUS_TIMES
+) -> Assoc:
+    """``C = A (x) B`` — element-wise semiring multiplication (intersection)."""
+    if cap is None:
+        cap = min(a.capacity, b.capacity)
+    idx = lex_searchsorted(b.rows, b.cols, a.rows, a.cols, side="left")
+    idx_c = jnp.minimum(idx, b.capacity - 1)
+    hit = (b.rows[idx_c] == a.rows) & (b.cols[idx_c] == a.cols) & (a.rows != PAD)
+    vals = jnp.where(hit, sr.mul(a.vals, b.vals[idx_c]), jnp.asarray(sr.zero, a.vals.dtype))
+    rows = jnp.where(hit, a.rows, PAD)
+    cols = jnp.where(hit, a.cols, PAD)
+    # already sorted (subset of A's ordering) — just combine/compact
+    out = _combine_sorted(rows, cols, vals, cap, sr)
+    return dataclasses.replace(out, overflow=out.overflow | a.overflow | b.overflow)
+
+
+# ---------------------------------------------------------------------------
+# array multiplication  C = A (+).(x) B   (table transformation)
+# ---------------------------------------------------------------------------
+
+def matmul(
+    a: Assoc,
+    b: Assoc,
+    cap: int,
+    max_fanout: int,
+    sr: Semiring = PLUS_TIMES,
+) -> Assoc:
+    """Semiring spGEMM via sort-merge join on the inner key.
+
+    Static-shape contract: each A-entry may join with at most ``max_fanout``
+    B-entries sharing its inner key; if any key's true fanout exceeds the
+    bound, the result's ``overflow`` flag is set (entries beyond the bound are
+    dropped).  ``cap`` bounds the output nonzeros.  This is the honest price
+    of hypersparse spGEMM under XLA static shapes and is documented API.
+    """
+    at = transpose(a, sr=sr)  # sorted by (inner key = A's col, A's row)
+    # run of B rows equal to each AT entry's inner key
+    lo = jnp.searchsorted(b.rows, at.rows, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(b.rows, at.rows, side="right").astype(jnp.int32)
+    fan = hi - lo
+    clipped = jnp.any((fan > max_fanout) & (at.rows != PAD))
+    m = at.capacity
+    f = max_fanout
+    idx = lo[:, None] + jnp.arange(f, dtype=jnp.int32)[None, :]  # [m, f]
+    ok = (idx < hi[:, None]) & (at.rows[:, None] != PAD)
+    idx_c = jnp.minimum(idx, b.capacity - 1)
+    prod_rows = jnp.where(ok, at.cols[:, None], PAD)  # AT.col is A's row key
+    prod_cols = jnp.where(ok, b.cols[idx_c], PAD)
+    prod_vals = jnp.where(
+        ok, sr.mul(at.vals[:, None], b.vals[idx_c]), jnp.asarray(sr.zero, a.vals.dtype)
+    )
+    out = from_triples(
+        prod_rows.reshape(m * f),
+        prod_cols.reshape(m * f),
+        prod_vals.reshape(m * f),
+        cap,
+        sr,
+    )
+    return dataclasses.replace(
+        out, overflow=out.overflow | clipped | a.overflow | b.overflow
+    )
+
+
+# ---------------------------------------------------------------------------
+# transpose, reductions, queries
+# ---------------------------------------------------------------------------
+
+def transpose(a: Assoc, sr: Semiring = PLUS_TIMES) -> Assoc:
+    """``A^T`` — swap row/col keys and re-sort (keys unique, nothing combines)."""
+    order = jnp.lexsort((a.rows, a.cols))
+    out = Assoc(
+        rows=a.cols[order],
+        cols=a.rows[order],
+        vals=a.vals[order],
+        nnz=a.nnz,
+        overflow=a.overflow,
+    )
+    return out
+
+
+def reduce_rows(a: Assoc, cap: int | None = None, sr: Semiring = PLUS_TIMES) -> Assoc:
+    """Fold each row with ``sr.add`` (out-degree when values count edges).
+
+    Returns an Assoc whose keys are ``(row, 0)``.
+    """
+    if cap is None:
+        cap = a.capacity
+    rows = a.rows
+    cols = jnp.where(rows != PAD, 0, PAD).astype(jnp.int32)
+    return _combine_sorted(rows, cols, a.vals, cap, sr)
+
+
+def reduce_cols(a: Assoc, cap: int | None = None, sr: Semiring = PLUS_TIMES) -> Assoc:
+    """Fold each column with ``sr.add`` (in-degree); keys become ``(col, 0)``."""
+    if cap is None:
+        cap = a.capacity
+    t = transpose(a, sr)
+    return reduce_rows(t, cap, sr)
+
+
+def get(a: Assoc, r, c, sr: Semiring = PLUS_TIMES) -> jax.Array:
+    """Point query ``A(r, c)`` — semiring zero when absent."""
+    r = jnp.asarray(r, jnp.int32)
+    c = jnp.asarray(c, jnp.int32)
+    scalar = r.ndim == 0
+    rq = jnp.atleast_1d(r)
+    cq = jnp.atleast_1d(c)
+    idx = lex_searchsorted(a.rows, a.cols, rq, cq, side="left")
+    idx_c = jnp.minimum(idx, a.capacity - 1)
+    hit = (a.rows[idx_c] == rq) & (a.cols[idx_c] == cq)
+    out = jnp.where(hit, a.vals[idx_c], jnp.asarray(sr.zero, a.vals.dtype))
+    return out[0] if scalar else out
+
+
+def extract_row(a: Assoc, r, cap: int, sr: Semiring = PLUS_TIMES) -> Assoc:
+    """Row slice ``A(r, :)`` (e.g. nearest-neighbours of a vertex, Fig. 1)."""
+    keep = a.rows == jnp.asarray(r, jnp.int32)
+    rows = jnp.where(keep, a.rows, PAD)
+    cols = jnp.where(keep, a.cols, PAD)
+    vals = jnp.where(keep, a.vals, jnp.asarray(sr.zero, a.vals.dtype))
+    return _combine_sorted(rows, cols, vals, cap, sr)
+
+
+def nnz(a: Assoc) -> jax.Array:
+    return a.nnz
+
+
+def to_dense(a: Assoc, nrows: int, ncols: int, sr: Semiring = PLUS_TIMES) -> jax.Array:
+    """Materialize as dense (small arrays / tests only).
+
+    A well-formed Assoc has unique keys, so a plain scatter-set suffices;
+    pad slots carry out-of-range PAD keys and are dropped by ``mode="drop"``.
+    """
+    dense = jnp.full((nrows, ncols), sr.zero, a.vals.dtype)
+    return dense.at[a.rows, a.cols].set(a.vals, mode="drop")
+
+
+def is_sorted_unique(a: Assoc) -> jax.Array:
+    """Invariant check used by property tests: live keys strictly increasing,
+    live entries a prefix, pads consistent, nnz matches."""
+    r, c = a.rows, a.cols
+    ok_pairs = (r[:-1] < r[1:]) | ((r[:-1] == r[1:]) & (c[:-1] < c[1:]))
+    live = (r[:-1] != PAD) & (r[1:] != PAD)
+    within = jnp.all(jnp.where(live, ok_pairs, True))
+    idx = jnp.arange(r.shape[0], dtype=jnp.int32)
+    count_ok = jnp.sum((r != PAD).astype(jnp.int32)) == a.nnz
+    prefix_ok = jnp.all((r != PAD) == (idx < a.nnz))  # live entries are a prefix
+    pad_ok = jnp.all((r == PAD) == (c == PAD))
+    return within & count_ok & prefix_ok & pad_ok

@@ -1,0 +1,296 @@
+"""Distributed hierarchical associative arrays.
+
+Two designs, mirroring the paper and going one step beyond it:
+
+* :class:`ParallelHierStream` — the paper's scaling design (Section V):
+  every device owns an *independent* ``HierAssoc`` instance and ingests its
+  own slice of the stream.  The update path has **zero collectives**, which is
+  exactly why the paper scales linearly to 34,000 instances; global telemetry
+  (total nnz, aggregate rate) uses a ``psum`` outside the hot loop.
+
+* :func:`route_updates` / :class:`ShardedAssoc` — beyond-paper: one *global*
+  array sharded by row-key range.  Each device buckets its locally observed
+  triples by owner and exchanges them with a single ``all_to_all``, then
+  ingests only its own range.  This is the production "one table, many
+  writers" design the paper delegates to Accumulo, rebuilt on the TPU
+  interconnect.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import assoc, hierarchical, streaming
+from .assoc import Assoc, PAD
+from .hierarchical import HierAssoc
+from .semiring import PLUS_TIMES, Semiring
+
+
+# ---------------------------------------------------------------------------
+# paper-faithful: independent instances, zero update-path collectives
+# ---------------------------------------------------------------------------
+
+class ParallelHierStream:
+    """One independent hierarchical array per device (paper Section V)."""
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        cuts: Sequence[int],
+        top_capacity: int,
+        batch_size: int,
+        sr: Semiring = PLUS_TIMES,
+        axis_names: Tuple[str, ...] | None = None,
+    ):
+        self.mesh = mesh
+        self.cuts = tuple(int(c) for c in cuts)
+        self.sr = sr
+        self.batch_size = batch_size
+        self.axes = tuple(axis_names or mesh.axis_names)
+        self.n_instances = 1
+        for a in self.axes:
+            self.n_instances *= mesh.shape[a]
+        self._top_capacity = top_capacity
+
+        def _init():
+            return hierarchical.init(self.cuts, top_capacity, batch_size, sr)
+
+        # replicate the *program*, not the data: each device materializes its
+        # own empty hierarchy, sharded on the leading (instance) axis.
+        def init_all():
+            h = _init()
+            return jax.tree.map(lambda x: jnp.broadcast_to(x, (1,) + x.shape), h)
+
+        self._init_all = init_all
+        spec = P(self.axes)
+        self._state_spec = spec
+
+        @functools.partial(
+            jax.shard_map,
+            mesh=mesh,
+            in_specs=(spec, spec, spec, spec),
+            out_specs=spec,
+            check_vma=False,
+        )
+        def _update(h, rows, cols, vals):
+            h = jax.tree.map(lambda x: x[0], h)  # drop instance dim
+            h = hierarchical.update_triples(
+                h, rows[0], cols[0], vals[0], self.cuts, self.sr
+            )
+            return jax.tree.map(lambda x: x[None], h)
+
+        self.update = jax.jit(_update, donate_argnums=(0,))
+
+        @functools.partial(
+            jax.shard_map,
+            mesh=mesh,
+            in_specs=(spec,),
+            out_specs=P(),
+            check_vma=False,
+        )
+        def _global_nnz(h):
+            local = hierarchical.nnz_total(jax.tree.map(lambda x: x[0], h))
+            for ax in self.axes:
+                local = lax.psum(local, ax)
+            return local
+
+        self.global_nnz = jax.jit(_global_nnz)
+
+    def init_state(self) -> HierAssoc:
+        """Per-device hierarchies, stacked on a leading instance axis."""
+        n = self.n_instances
+        h = self._init_all()
+        h = jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape[1:]), h)
+        sharding = NamedSharding(self.mesh, self._state_spec)
+        return jax.tree.map(
+            lambda x: jax.device_put(x, NamedSharding(self.mesh, P(self.axes))), h
+        )
+
+    def shard_stream(self, rows, cols, vals):
+        """Place a [n_instances, B] triple batch with instance-major sharding."""
+        sh = NamedSharding(self.mesh, P(self.axes))
+        return tuple(jax.device_put(x, sh) for x in (rows, cols, vals))
+
+
+# ---------------------------------------------------------------------------
+# beyond paper: key-range-sharded global array with all_to_all routing
+# ---------------------------------------------------------------------------
+
+def owner_of(rows: jax.Array, n_shards: int, key_space: int) -> jax.Array:
+    """Contiguous row-range ownership: shard i owns rows in
+    ``[i*key_space/n, (i+1)*key_space/n)``."""
+    per = max(1, key_space // n_shards)
+    return jnp.clip(rows // per, 0, n_shards - 1).astype(jnp.int32)
+
+
+def bucket_by_owner(
+    rows: jax.Array,
+    cols: jax.Array,
+    vals: jax.Array,
+    n_shards: int,
+    key_space: int,
+    slot_cap: int,
+    sr: Semiring = PLUS_TIMES,
+):
+    """Group a local triple batch into ``n_shards`` fixed-size slots.
+
+    Returns ``[n_shards, slot_cap]`` arrays ready for ``all_to_all``.  Slots
+    overflowing ``slot_cap`` set the returned ``dropped`` counter (back
+    pressure is surfaced, not silently lost).
+    """
+    owner = owner_of(rows, n_shards, key_space)
+    live = rows != PAD
+    owner = jnp.where(live, owner, n_shards)  # park pads in a virtual shard
+    # stable position of each triple within its owner bucket
+    one = live.astype(jnp.int32)
+    # rank within bucket = number of earlier entries with same owner
+    same = owner[None, :] == owner[:, None]
+    earlier = jnp.tril(jnp.ones_like(same), k=-1)
+    rank = jnp.sum(same & earlier.astype(bool), axis=1).astype(jnp.int32)
+    dropped = jnp.sum((rank >= slot_cap) & live)
+    slot = jnp.where((rank < slot_cap) & live, owner * slot_cap + rank, n_shards * slot_cap)
+    out_r = jnp.full((n_shards * slot_cap,), PAD, jnp.int32).at[slot].set(rows, mode="drop")
+    out_c = jnp.full((n_shards * slot_cap,), PAD, jnp.int32).at[slot].set(cols, mode="drop")
+    out_v = (
+        jnp.full((n_shards * slot_cap,), sr.zero, vals.dtype).at[slot].set(vals, mode="drop")
+    )
+    shape = (n_shards, slot_cap)
+    return out_r.reshape(shape), out_c.reshape(shape), out_v.reshape(shape), dropped
+
+
+def bucket_by_owner_sorted(
+    rows: jax.Array,
+    cols: jax.Array,
+    vals: jax.Array,
+    n_shards: int,
+    key_space: int,
+    slot_cap: int,
+    sr: Semiring = PLUS_TIMES,
+):
+    """O(B log B) bucketing via sort (production path; the quadratic-rank
+    variant above is kept as the readable reference for tests)."""
+    owner = owner_of(rows, n_shards, key_space)
+    live = rows != PAD
+    owner = jnp.where(live, owner, n_shards)
+    order = jnp.argsort(owner, stable=True)
+    owner_s = owner[order]
+    # rank within run of equal owners
+    idx = jnp.arange(rows.shape[0], dtype=jnp.int32)
+    start = jnp.searchsorted(owner_s, owner_s, side="left").astype(jnp.int32)
+    rank = idx - start
+    live_s = live[order]
+    dropped = jnp.sum((rank >= slot_cap) & live_s)
+    slot = jnp.where(
+        (rank < slot_cap) & live_s, owner_s * slot_cap + rank, n_shards * slot_cap
+    )
+    out_r = jnp.full((n_shards * slot_cap,), PAD, jnp.int32).at[slot].set(
+        rows[order], mode="drop"
+    )
+    out_c = jnp.full((n_shards * slot_cap,), PAD, jnp.int32).at[slot].set(
+        cols[order], mode="drop"
+    )
+    out_v = (
+        jnp.full((n_shards * slot_cap,), sr.zero, vals.dtype)
+        .at[slot]
+        .set(vals[order], mode="drop")
+    )
+    shape = (n_shards, slot_cap)
+    return out_r.reshape(shape), out_c.reshape(shape), out_v.reshape(shape), dropped
+
+
+class ShardedAssoc:
+    """A single global hierarchical array, sharded by row-key range.
+
+    ``update``: every device buckets its batch by owner, one ``all_to_all``
+    exchanges the buckets, and each device ingests triples for its own range
+    into its local ``HierAssoc``.  Query for a key routes to its owner.
+    """
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        axis: str,
+        cuts: Sequence[int],
+        top_capacity: int,
+        batch_size: int,
+        key_space: int,
+        slot_cap: int | None = None,
+        sr: Semiring = PLUS_TIMES,
+    ):
+        self.mesh = mesh
+        self.axis = axis
+        self.n_shards = mesh.shape[axis]
+        self.key_space = key_space
+        self.cuts = tuple(int(c) for c in cuts)
+        self.sr = sr
+        # worst case a device's whole batch goes to one owner
+        self.slot_cap = slot_cap or batch_size
+        ingest_cap = self.n_shards * self.slot_cap
+        self._init = lambda: hierarchical.init(
+            self.cuts, top_capacity, ingest_cap, sr
+        )
+        other_axes = tuple(a for a in mesh.axis_names if a != axis)
+        spec_state = P(axis)
+        spec_batch = P(axis)
+
+        @functools.partial(
+            jax.shard_map,
+            mesh=mesh,
+            in_specs=(spec_state, spec_batch, spec_batch, spec_batch),
+            out_specs=(spec_state, P()),
+            check_vma=False,
+        )
+        def _update(h, rows, cols, vals):
+            h = jax.tree.map(lambda x: x[0], h)
+            r, c, v = rows[0], cols[0], vals[0]
+            br, bc, bv, dropped = bucket_by_owner_sorted(
+                r, c, v, self.n_shards, key_space, self.slot_cap, sr
+            )
+            # exchange buckets: shard axis of the leading dim
+            br = lax.all_to_all(br, axis, 0, 0, tiled=False)
+            bc = lax.all_to_all(bc, axis, 0, 0, tiled=False)
+            bv = lax.all_to_all(bv, axis, 0, 0, tiled=False)
+            flat = lambda x: x.reshape((-1,))
+            h = hierarchical.update_triples(
+                h, flat(br), flat(bc), flat(bv), self.cuts, sr
+            )
+            dropped = lax.psum(dropped, axis)
+            for ax in other_axes:
+                dropped = lax.pmax(dropped, ax)
+            return jax.tree.map(lambda x: x[None], h), dropped
+
+        self.update = jax.jit(_update, donate_argnums=(0,))
+
+        @functools.partial(
+            jax.shard_map,
+            mesh=mesh,
+            in_specs=(spec_state, P(), P()),
+            out_specs=P(),
+            check_vma=False,
+        )
+        def _get(h, r, c):
+            h = jax.tree.map(lambda x: x[0], h)
+            snap_cap = h.layers[-1].capacity
+            mine = owner_of(r, self.n_shards, key_space) == lax.axis_index(axis)
+            snap = hierarchical.snapshot(h, cap=snap_cap, sr=sr)
+            val = assoc.get(snap, r, c, sr)
+            val = jnp.where(mine, val, jnp.asarray(sr.zero, val.dtype))
+            out = lax.psum(val, axis)
+            for ax in other_axes:
+                out = lax.pmax(out, ax)
+            return out
+
+        self.get = jax.jit(_get)
+
+    def init_state(self) -> HierAssoc:
+        n = self.n_shards
+        h = self._init()
+        h = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), h)
+        sh = NamedSharding(self.mesh, P(self.axis))
+        return jax.tree.map(lambda x: jax.device_put(x, sh), h)

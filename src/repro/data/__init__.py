@@ -1,0 +1,1 @@
+from . import dictionary, rmat, tokens  # noqa: F401

@@ -1,0 +1,112 @@
+"""Token data pipeline for LM training.
+
+Production shape: an infinite deterministic-given-(seed, step) stream of
+fixed-size batches with background prefetch (double-buffered host thread) and
+a resumable cursor — restart from checkpoint step N reproduces batch N+1
+exactly (fault-tolerance requirement: data and model state restore together).
+
+The source here is synthetic (Zipf-distributed token ids — the same
+power-law family as the paper's R-MAT streams, which is what makes the
+embedding-gradient stream hypersparse-with-hot-keys); a real deployment
+swaps ``_materialize`` for tokenized shards with identical cursor semantics.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TokenStream:
+    def __init__(
+        self,
+        vocab: int,
+        batch: int,
+        seq: int,
+        seed: int = 0,
+        zipf: float = 1.3,
+        start_step: int = 0,
+        frontend_shape: Optional[tuple] = None,
+    ):
+        self.vocab = vocab
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+        self.zipf = zipf
+        self.step = start_step
+        self.frontend_shape = frontend_shape
+        ranks = np.arange(1, vocab + 1, dtype=np.float64)
+        p = ranks**-zipf
+        self._p = p / p.sum()
+
+    # deterministic-given-(seed, step): the checkpoint cursor is just `step`
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed, step))
+        tokens = rng.choice(self.vocab, size=(self.batch, self.seq), p=self._p)
+        tokens = tokens.astype(np.int32)
+        labels = np.concatenate(
+            [tokens[:, 1:], np.full((self.batch, 1), -100, np.int32)], axis=1
+        )
+        out = {"tokens": tokens, "labels": labels}
+        if self.frontend_shape is not None:
+            out["frontend"] = rng.normal(size=(self.batch,) + self.frontend_shape).astype(
+                np.float32
+            ) * 0.02
+        return out
+
+    def __next__(self):
+        b = self.batch_at(self.step)
+        self.step += 1
+        return b
+
+    def cursor(self) -> int:
+        return self.step
+
+    def seek(self, step: int):
+        self.step = step
+
+
+class Prefetcher:
+    """Double-buffered background prefetch: overlaps host batch synthesis /
+    IO with device compute.  ``close()`` drains the thread."""
+
+    def __init__(self, stream: TokenStream, depth: int = 2, device_put=None):
+        self.stream = stream
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._put = device_put or (lambda b: jax.tree.map(jnp.asarray, b))
+
+        def work():
+            while not self._stop.is_set():
+                b = next(self.stream)
+                try:
+                    self.q.put(self._put(b), timeout=1.0)
+                except queue.Full:
+                    if self._stop.is_set():
+                        break
+                    # retry until the consumer catches up
+                    while not self._stop.is_set():
+                        try:
+                            self.q.put_nowait(self._put(b))
+                            break
+                        except queue.Full:
+                            self._stop.wait(0.05)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def __next__(self):
+        return self.q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the update-path hot-spots the paper optimizes.
+
+Each kernel ships as a triple:
+* ``kernel.py`` — ``pl.pallas_call`` + BlockSpec VMEM tiling (TPU target),
+  validated on CPU via ``interpret=True``;
+* ``ops.py`` — the jit'd public wrapper;
+* ``ref.py`` — the pure-jnp oracle the tests assert against.
+
+The LM architectures deliberately use plain jnp/XLA math (einsum attention,
+scan SSM): the paper's contribution is the sparse *update* path, not dense
+compute, and XLA already emits near-roofline HLO for the dense layers.
+"""
+from . import common  # noqa: F401
+from .merge_add import ops as merge_add_ops  # noqa: F401
+from .scatter_add import ops as scatter_add_ops  # noqa: F401
+from .sort_dedup import ops as sort_dedup_ops  # noqa: F401

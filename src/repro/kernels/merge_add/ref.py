@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the merge_add kernel.
+
+Semantics: given two lexicographically sorted, PAD-padded COO triple lists
+(keys unique within each list), produce the sorted union with duplicate keys
+combined by ``sr.add``, compacted into capacity ``cap`` — i.e. exactly
+``repro.core.assoc.add`` on raw arrays.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import assoc as assoc_mod
+from repro.core.assoc import Assoc, PAD
+from repro.core.semiring import PLUS_TIMES, Semiring
+
+
+def merge_add_ref(
+    a_rows, a_cols, a_vals, b_rows, b_cols, b_vals, cap: int, sr: Semiring = PLUS_TIMES
+):
+    """Returns (rows, cols, vals, nnz, overflow) of the combined array."""
+    nnz_a = jnp.sum((a_rows != PAD).astype(jnp.int32))
+    nnz_b = jnp.sum((b_rows != PAD).astype(jnp.int32))
+    a = Assoc(a_rows, a_cols, a_vals, nnz_a, jnp.zeros((), jnp.bool_))
+    b = Assoc(b_rows, b_cols, b_vals, nnz_b, jnp.zeros((), jnp.bool_))
+    out = assoc_mod.add(a, b, cap=cap, sr=sr)
+    return out.rows, out.cols, out.vals, out.nnz, out.overflow

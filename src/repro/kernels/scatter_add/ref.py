@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for scatter_add."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.assoc import PAD
+
+
+def scatter_add_ref(ids, rows, table):
+    live = ids != PAD
+    safe = jnp.where(live, ids, 0)
+    add = jnp.where(live[:, None], rows, 0).astype(table.dtype)
+    return table.at[safe].add(add)

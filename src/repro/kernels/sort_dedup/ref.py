@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for sort_dedup: identical semantics to
+``repro.core.assoc.from_triples``."""
+from __future__ import annotations
+
+from repro.core import assoc as assoc_mod
+from repro.core.semiring import PLUS_TIMES, Semiring
+
+
+def sort_dedup_ref(rows, cols, vals, cap: int, sr: Semiring = PLUS_TIMES):
+    out = assoc_mod.from_triples(rows, cols, vals, cap=cap, sr=sr)
+    return out.rows, out.cols, out.vals, out.nnz, out.overflow

@@ -1,0 +1,251 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# NOTE: the two lines above MUST run before any other import — jax locks the
+# device count at first backend initialization.
+
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh) cell
+lowers AND compiles on the production meshes, and extract the roofline terms
+from the compiled artifact.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2_0_5b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh single --out experiments/dryrun
+    python -m repro.launch.dryrun --all --mesh multi          # 2x16x16 = 512 chips
+
+Per cell this prints/stores: per-device memory analysis (proves it fits),
+cost analysis (FLOPs/bytes for the roofline), the collective mix parsed from
+the HLO, and the three roofline terms.
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import roofline as RL
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import shapes as SH
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.models import sharding as SD
+from repro.optim import adamw
+
+
+def _sharding(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, compile_=True, strategy="tp"):
+    """Lower (+ compile) one cell; returns a result dict."""
+    cfg = get_config(arch)
+    from repro.models import moe as MOE
+    from repro.models import transformer as TFM
+    ax0 = SD.mesh_axes(mesh)
+    if strategy in ("ep", "ep_fsdp"):  # shard_map expert parallelism
+        MOE.EP_CONTEXT["mesh"] = mesh
+        MOE.EP_CONTEXT["dp"] = ax0.dp_spec
+        if strategy == "ep":
+            strategy = "tp"
+    else:
+        MOE.EP_CONTEXT["mesh"] = None
+    if strategy == "fsdp_flat":  # pin activations: batch over the whole mesh
+        TFM.ACT_CTX["spec"] = P(tuple(ax0.dp) + (ax0.tp,), None, None)
+        TFM.ACT_CTX["cast_params"] = True  # bf16 weight gathers
+    elif strategy == "ep_fsdp":  # EP needs tokens replicated across "model"
+        TFM.ACT_CTX["spec"] = P(ax0.dp_spec, None, None)
+        TFM.ACT_CTX["cast_params"] = True
+    else:
+        TFM.ACT_CTX["spec"] = None
+        TFM.ACT_CTX["cast_params"] = False
+    shape = SH.SHAPES[shape_name]
+    ok, reason = SH.cell_is_runnable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "reason": reason}
+
+    ax = SD.mesh_axes(mesh)
+    dp_size = 1
+    for a in ax.dp:
+        dp_size *= mesh.shape[a]
+    n_chips = dp_size * mesh.shape[ax.tp]
+    t0 = time.time()
+
+    params_struct = SH.params_struct(cfg)
+    if os.environ.get("REPRO_PARAMS_BF16"):  # §Perf: bf16 weight storage
+        params_struct = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+            if x.dtype == jnp.float32 else x,
+            params_struct,
+        )
+    pspecs = SD.param_specs(cfg, mesh, params_struct, strategy)
+    pshard = _sharding(mesh, pspecs)
+
+    if shape.kind == "train":
+        bx = SD.batch_axes(cfg, mesh, strategy)
+        bx_size = 1
+        for a in (bx if isinstance(bx, tuple) else (bx,)):
+            bx_size *= mesh.shape[a]
+        n_micro = SH.grad_accum_steps(cfg, shape, bx_size)
+        step = ST.make_train_step(
+            cfg, n_micro=n_micro, dp_spec=bx,
+            ep_axis=None if strategy == "fsdp_flat" else "model",
+        )
+        opt_struct = jax.eval_shape(adamw.init, params_struct)
+        ospecs = SD.opt_specs(cfg, mesh, opt_struct, strategy)
+        oshard = _sharding(mesh, ospecs)
+        state_struct = {"params": params_struct, "opt": opt_struct}
+        state_shard = {"params": pshard, "opt": oshard}
+        binputs = SH.train_inputs(cfg, shape)
+        bspecs = SD.batch_specs(cfg, mesh, strategy)
+        bshard = {k: NamedSharding(mesh, bspecs[k]) for k in binputs}
+        jitted = jax.jit(
+            step,
+            in_shardings=(state_shard, bshard),
+            out_shardings=(state_shard, None),
+            donate_argnums=(0,),
+        )
+        with mesh:
+            lowered = jitted.lower(state_struct, binputs)
+        extra = {"n_micro": n_micro, "strategy": strategy}
+    elif shape.kind == "prefill":
+        step = ST.make_prefill_step(cfg)
+        binputs = SH.prefill_inputs(cfg, shape)
+        bspecs = SD.batch_specs(cfg, mesh)
+        bshard = {k: NamedSharding(mesh, bspecs[k]) for k in binputs}
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, bshard),
+            out_shardings=NamedSharding(mesh, P(ax.dp_spec, None, ax.tp)),
+        )
+        with mesh:
+            lowered = jitted.lower(params_struct, binputs)
+        extra = {}
+    else:  # decode
+        step = ST.make_serve_step(cfg)
+        token, cache_struct = SH.decode_inputs(cfg, shape)
+        cspecs = SD.cache_specs(cfg, mesh, cache_struct, shape.batch)
+        cshard = _sharding(mesh, cspecs)
+        tshard = NamedSharding(
+            mesh, P(ax.dp_spec, None) if shape.batch >= dp_size else P(None, None)
+        )
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, cshard, tshard),
+            out_shardings=(
+                NamedSharding(mesh, P(ax.dp_spec if shape.batch >= dp_size else None, None, ax.tp)),
+                cshard,
+            ),
+            donate_argnums=(1,),
+        )
+        with mesh:
+            lowered = jitted.lower(params_struct, cache_struct, token)
+        extra = {}
+
+    t_lower = time.time() - t0
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": dict(zip(mesh.axis_names, (mesh.shape[a] for a in mesh.axis_names))),
+        "n_chips": n_chips,
+        "status": "lowered",
+        "lower_s": round(t_lower, 1),
+        **extra,
+    }
+    if not compile_:
+        return result
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    result["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        try:
+            result["memory"] = {
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "peak_bytes_per_device": int(
+                    getattr(mem, "peak_memory_in_bytes", 0)
+                    or (mem.argument_size_in_bytes + mem.temp_size_in_bytes)
+                ),
+            }
+        except Exception:
+            result["memory"] = {"repr": str(mem)}
+
+    rl = RL.analyze(
+        compiled,
+        get_config(arch),
+        SH.SHAPES[shape_name],
+        n_chips,
+        n_micro=extra.get("n_micro", 1),
+    )
+    result["roofline"] = rl.to_dict()
+    result["status"] = "compiled"
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SH.SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--lower-only", action="store_true")
+    ap.add_argument("--strategy", default="tp", choices=["tp", "fsdp_flat", "ep", "ep_fsdp"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    cells = (
+        [(a, s) for a in ARCH_IDS for s in SH.SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        tag = f"{arch}x{shape}x{args.mesh}" + (f"x{args.tag}" if args.tag else "")
+        try:
+            res = lower_cell(arch, shape, mesh, compile_=not args.lower_only, strategy=args.strategy)
+        except Exception as e:  # a failure here is a bug in the system
+            failures += 1
+            res = {
+                "arch": arch,
+                "shape": shape,
+                "status": "FAILED",
+                "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:],
+            }
+        with open(os.path.join(args.out, f"{tag}.json"), "w") as f:
+            json.dump(res, f, indent=2)
+        line = {k: v for k, v in res.items() if k not in ("trace", "roofline", "memory")}
+        if "roofline" in res:
+            r = res["roofline"]
+            line["bottleneck"] = r["bottleneck"]
+            line["t(c/m/x) ms"] = (
+                f"{1e3*r['t_compute_s']:.2f}/{1e3*r['t_memory_s']:.2f}/"
+                f"{1e3*r['t_collective_s']:.2f}"
+            )
+        if "memory" in res and "temp_bytes" in res.get("memory", {}):
+            line["temp_gb/dev"] = round(res["memory"]["temp_bytes"] / 2**30, 2)
+        print(json.dumps(line), flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

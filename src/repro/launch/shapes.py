@@ -1,0 +1,105 @@
+"""Assigned input shapes and per-cell input specs (ShapeDtypeStruct stand-ins
+— weak-type-correct, shardable, no device allocation).
+
+The 4 shapes x 10 archs = 40 dry-run cells.  ``decode_*``/``long_*`` lower
+``serve_step`` (one token against a seq_len cache); ``long_500k`` runs only
+for sub-quadratic archs (cfg.subquadratic) — skips are documented, not
+silent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import serving as SV
+from repro.models import transformer as TF
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """(runnable, reason-if-skipped) for an (arch x shape) cell."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, (
+            "long_500k requires a sub-quadratic path; "
+            f"{cfg.name} is pure full-attention (documented skip, DESIGN.md 3.6)"
+        )
+    return True, ""
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.batch, shape.seq
+    s_text = s - (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+    out = {
+        "tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s_text), jnp.int32),
+    }
+    if cfg.frontend == "vision":
+        out["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), _dtype(cfg)
+        )
+    elif cfg.encoder_layers:
+        out["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_tokens, cfg.d_model), _dtype(cfg)
+        )
+    return out
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    out = train_inputs(cfg, shape)
+    del out["labels"]
+    return out
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeSpec):
+    """(token struct, cache struct) — cache via eval_shape, zero allocation."""
+    token = jax.ShapeDtypeStruct((shape.batch, 1), jnp.int32)
+    cache = jax.eval_shape(
+        functools.partial(SV.init_cache, cfg, shape.batch, shape.seq, _dtype(cfg))
+    )
+    return token, cache
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(TF.init_params, jax.random.PRNGKey(0), cfg)
+    )
+
+
+# Per-arch gradient-accumulation targets for train_4k.  Baseline policy:
+# microbatch down to ONE sequence per data shard — the S^2 attention
+# working set (scores [H, S, S] ~ 0.5-9 GB bf16 at S=4096) times the local
+# batch is the dominant live tensor under remat, so B_local=1 is what keeps
+# every arch under the v5e 16 GB budget.  whisper's S^2 is tiny (d=384),
+# it can afford larger microbatches.
+GRAD_ACCUM = {
+    "whisper-tiny": 2,
+}
+
+
+def grad_accum_steps(cfg: ModelConfig, shape: ShapeSpec, dp_size: int) -> int:
+    target = GRAD_ACCUM.get(cfg.name, shape.batch // max(1, dp_size))
+    return max(1, min(target, shape.batch // max(1, dp_size)))

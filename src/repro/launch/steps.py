@@ -1,0 +1,133 @@
+"""Train / prefill / serve step factories — the functions the dry-run lowers
+and the real launchers execute.
+
+``make_train_step`` implements microbatched gradient accumulation
+(``lax.scan`` over microbatches, f32 accumulators) around the model's
+rematerialized forward/backward, followed by the AdamW update.  Gradient
+compression (top-k + error feedback) optionally wraps the accumulated grads.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import serving as SV
+from repro.models import transformer as TF
+from repro.models.config import ModelConfig
+from repro.optim import adamw, compression
+
+
+def init_train_state(key, cfg: ModelConfig) -> Dict[str, Any]:
+    params = TF.init_params(key, cfg)
+    return {"params": params, "opt": adamw.init(params)}
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+    n_micro: int = 1,
+    ep_axis: Optional[str] = "model",
+    comp_cfg: compression.CompressionConfig = compression.CompressionConfig(),
+    dp_spec=None,  # data-parallel mesh axes (for microbatch reshape constraint)
+):
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    batch: tokens [GB, S], labels [GB, S], optional frontend [GB, P, d].
+
+    ``dp_spec`` pins the microbatch reshape's sharding: [GB, S] ->
+    [n_micro, mb, S] has two 16-divisible factors and GSPMD happily shards
+    the *scan* axis instead of the batch axis, silently replicating all
+    activations across data shards (observed on granite train HLO).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def loss_fn(params, tokens, labels, fe):
+        loss, metrics = TF.train_loss(
+            params, cfg, tokens, labels, frontend_embeds=fe, ep_axis=ep_axis
+        )
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        tokens, labels = batch["tokens"], batch["labels"]
+        fe = batch.get("frontend")
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, tokens, labels, fe)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            gb = tokens.shape[0]
+            mb = gb // n_micro
+
+            def r(x):
+                y = x.reshape((n_micro, mb) + x.shape[1:])
+                if dp_spec is not None:
+                    spec = P(None, dp_spec, *([None] * (x.ndim - 1)))
+                    y = lax.with_sharding_constraint(y, spec)
+                return y
+
+            xs = (r(tokens), r(labels), r(fe) if fe is not None else None)
+
+            def body(acc, xs_t):
+                t, l, f = xs_t
+                (loss_m, metrics_m), g = grad_fn(params, t, l, f)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g
+                )
+                return acc, (loss_m, metrics_m["nll"])
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            grads, (losses, nlls) = lax.scan(body, zero, xs)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = losses.mean()
+            metrics = {"nll": nlls.mean()}
+        if comp_cfg.enabled:
+            grads, residual = compression.compress(
+                grads, state["residual"], comp_cfg
+            )
+        new_params, new_opt, opt_metrics = adamw.update(
+            grads, state["opt"], params, opt_cfg
+        )
+        new_state = {"params": new_params, "opt": new_opt}
+        if comp_cfg.enabled:
+            new_state["residual"] = residual
+        metrics = {"loss": loss, **{k: v for k, v in metrics.items()}, **opt_metrics}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ep_axis: Optional[str] = "model"):
+    """Full-sequence forward emitting last-position logits only (a 32 K x
+    262 K vocab logits tensor would be absurd; serving samples from the last
+    position)."""
+
+    def prefill_step(params, batch):
+        logits, hidden, _ = TF.forward(
+            params,
+            cfg,
+            batch["tokens"],
+            batch.get("frontend"),
+            ep_axis=ep_axis,
+            remat=False,
+            last_only=True,
+        )
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, ep_axis: Optional[str] = "model"):
+    """One-token decode against the static cache (decode_32k / long_500k)."""
+
+    def serve_step(params, cache, token):
+        return SV.decode_step(params, cfg, cache, token, ep_axis=ep_axis)
+
+    return serve_step

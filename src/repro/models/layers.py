@@ -1,0 +1,312 @@
+"""Dense building blocks shared by all architectures.
+
+Functional style: ``init_*`` returns a param dict, ``apply`` functions are
+pure.  Parameters are plain nested dicts so sharding plans can be expressed
+as path-pattern -> PartitionSpec rules (see models/sharding.py).
+
+These layers use straight jnp/einsum math: the paper's contribution is the
+sparse update path (Pallas kernels), and XLA already lowers dense attention/
+FFN einsums to near-roofline MXU code.  Attention is written so the KV cache
+and sequence axes are shardable for long-context decode (SP hillclimb).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+BIG_NEG = -2.0e38  # mask value safe in f32 softmax
+
+
+def _dense_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ norms
+def init_norm(cfg: ModelConfig, d: int) -> Params:
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))}
+    return {"scale": jnp.ones((d,))}
+
+
+def apply_norm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        var = (xf**2).mean(-1, keepdims=True)
+        out = xf * lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: [..., S] int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ flash
+def flash_attention(
+    q: jax.Array,  # [B, Sq, kvh, g, hd]
+    k: jax.Array,  # [B, Sk, kvh, hd]
+    v: jax.Array,  # [B, Sk, kvh, hd]
+    q_pos: jax.Array,  # [B, Sq]
+    k_pos: jax.Array,  # [B, Sk]
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Blockwise attention with online softmax (Rabe-Staats / FlashAttention
+    recurrence) in pure jnp — O(Sq*Sk) FLOPs but O(chunk^2) live memory
+    instead of O(Sq*Sk).  At 32 K prefill the naive score tensor is ~56 GB
+    per device; this caps it at ~50 MB.  Semantically identical to the naive
+    path (tests assert allclose).  Returns [B, Sq, kvh, g, vd] where vd is
+    v's head dim (may differ from q/k's, e.g. MLA).
+    """
+    B, Sq, kvh, g, hd = q.shape
+    Sk = k.shape[1]
+    vd = v.shape[-1]
+    qc = min(q_chunk, Sq)
+    while Sq % qc:
+        qc -= 1
+    kc = min(k_chunk, Sk)
+    while Sk % kc:
+        kc -= 1
+    nq, nk = Sq // qc, Sk // kc
+    kd = k.shape[-1]  # q/k head dim (may exceed vd, e.g. MLA nope+rope)
+    qs = jnp.moveaxis(q.reshape(B, nq, qc, kvh, g, hd), 1, 0)  # [nq, B, qc, kvh, g, hd]
+    qps = jnp.moveaxis(q_pos.reshape(B, nq, qc), 1, 0)
+    ks = jnp.moveaxis(k.reshape(B, nk, kc, kvh, kd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, kc, kvh, vd), 1, 0)
+    kps = jnp.moveaxis(k_pos.reshape(B, nk, kc), 1, 0)
+
+    def q_block(carry, xq):
+        qb, qp = xq  # [B, qc, kvh, g, hd], [B, qc]
+
+        # checkpointed: scan-grad would otherwise SAVE every block's
+        # [B,kvh,g,qc,kc] probability tile as a backward residual — the very
+        # S^2 memory flash exists to avoid.  Recompute-in-backward is the
+        # flash-attention backward by construction.
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def kv_block(acc, xk):
+            kb, vb, kp = xk
+            m_prev, l_prev, o_prev = acc
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qb, kb) * scale  # [B,kvh,g,qc,kc]
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            ok = attention_mask(qp, kp, causal=causal, window=window, prefix_len=prefix_len)
+            s = jnp.where(ok[:, None, None, :, :], s.astype(jnp.float32), BIG_NEG)
+            m_new = jnp.maximum(m_prev, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + p.sum(-1)
+            o_new = o_prev * corr[..., None] + jnp.einsum(
+                "bkgqt,btkh->bkgqh", p.astype(qb.dtype), vb
+            ).astype(jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, kvh, g, qc), BIG_NEG, jnp.float32)
+        l0 = jnp.zeros((B, kvh, g, qc), jnp.float32)
+        o0 = jnp.zeros((B, kvh, g, qc, vd), jnp.float32)
+        (m, l, o), _ = lax.scan(kv_block, (m0, l0, o0), (ks, vs, kps))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        # [B, kvh, g, qc, hd] -> [B, qc, kvh, g, hd]
+        return carry, jnp.moveaxis(o, 3, 1).astype(qb.dtype)
+
+    _, outs = lax.scan(q_block, 0, (qs, qps))  # [nq, B, qc, kvh, g, vd]
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, kvh, g, vd)
+
+
+FLASH_MIN_SEQ = 2048  # use blockwise attention at or above this Sq*Sk scale
+
+
+# ------------------------------------------------------------------ attention
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, h * hd)),
+        "wk": _dense_init(ks[1], (d, kvh * hd)),
+        "wv": _dense_init(ks[2], (d, kvh * hd)),
+        "wo": _dense_init(ks[3], (h * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,))
+        p["bk"] = jnp.zeros((kvh * hd,))
+        p["bv"] = jnp.zeros((kvh * hd,))
+    return p
+
+
+def attention_mask(
+    q_pos: jax.Array,  # [B, Sq]
+    k_pos: jax.Array,  # [B, Sk]
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+    k_valid: Optional[jax.Array] = None,  # [B, Sk] cache-slot validity
+) -> jax.Array:
+    """[B, Sq, Sk] boolean mask, built from position arithmetic.
+
+    Deliberately computed *inside* each (rematerialized) layer instead of
+    being passed in as a big tensor: it is pure iota math that XLA fuses into
+    the softmax, so nothing S x S ever hits HBM — at 32 K prefill a
+    materialized f32 mask would be gigabytes.
+    """
+    dq = q_pos[:, :, None]
+    dk = k_pos[:, None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(dq.shape, dk.shape), jnp.bool_)
+    if causal:
+        ok &= dk <= dq
+    if window is not None:
+        ok &= dk > dq - window
+    if prefix_len:
+        ok |= (dq < prefix_len) & (dk < prefix_len)
+    if k_valid is not None:
+        ok &= k_valid[:, None, :]
+    return ok
+
+
+def apply_attention(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, S, d]
+    positions: jax.Array,  # [B, S]
+    mask: Optional[jax.Array],  # [B, Sq, Sk] bool (None = no masking)
+    kv: Optional[Tuple[jax.Array, jax.Array]] = None,  # cached (k, v) incl. new
+    use_rope: bool = True,
+    flash: Optional[dict] = None,  # {causal, window, prefix_len} -> blockwise path
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Returns (out [B, S, d], (k, v) [B, Sk, kvH, hd]) — caller manages cache.
+
+    ``flash`` selects the blockwise online-softmax path (training/prefill at
+    long S); it replaces ``mask`` with structural parameters so no S x S
+    tensor is ever built.
+    """
+    B, S, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(B, S, h, hd)
+    if kv is None:
+        k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(x.dtype))
+        if "bk" in p:
+            k = k + p["bk"].astype(x.dtype)
+            v = v + p["bv"].astype(x.dtype)
+        k = k.reshape(B, S, kvh, hd)
+        v = v.reshape(B, S, kvh, hd)
+        k_pos = positions
+        if use_rope:
+            k = apply_rope(k, k_pos, cfg.rope_theta)
+    else:
+        k, v = kv  # already rope'd and cached
+        k_pos = positions  # only used by the flash path (kv path passes mask)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    # grouped-query: fold group into head dim of q
+    groups = h // kvh
+    qg = q.reshape(B, S, kvh, groups, hd)
+    if flash is not None:
+        ctx = flash_attention(
+            qg,
+            k,
+            v,
+            positions,
+            k_pos,
+            scale=1.0 / math.sqrt(hd),
+            softcap=cfg.logit_softcap,
+            **flash,
+        ).reshape(B, S, h * hd)
+    else:
+        scores = jnp.einsum("bskgh,btkh->bkgst", qg, k) / math.sqrt(hd)
+        if cfg.logit_softcap:
+            c = cfg.logit_softcap
+            scores = jnp.tanh(scores / c) * c
+        if mask is not None:
+            scores = jnp.where(mask[:, None, None, :, :], scores, BIG_NEG)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bkgst,btkh->bskgh", probs, v).reshape(B, S, h * hd)
+    out = jnp.einsum("bsh,hd->bsd", ctx, p["wo"].astype(x.dtype))
+    return out, (k, v)
+
+
+# ------------------------------------------------------------------ FFN
+def init_ffn(key, cfg: ModelConfig, d_ff: Optional[int] = None, d_in: Optional[int] = None) -> Params:
+    d = d_in or cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu":
+        return {
+            "wg": _dense_init(ks[0], (d, f)),
+            "wu": _dense_init(ks[1], (d, f)),
+            "wd": _dense_init(ks[2], (f, d)),
+        }
+    return {"wu": _dense_init(ks[0], (d, f)), "wd": _dense_init(ks[1], (f, d))}
+
+
+def apply_ffn(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if "wg" in p:
+        g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype)))
+        u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(x.dtype))
+        h = g * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["wu"].astype(x.dtype)))
+    return jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(x.dtype))
+
+
+# ------------------------------------------------------------------ embedding
+def init_embed(key, cfg: ModelConfig) -> Params:
+    vp = cfg.vocab_padded
+    p = {"table": _dense_init(key, (vp, cfg.d_model), scale=1.0)}
+    if not cfg.tied_embeddings:
+        p["head"] = _dense_init(jax.random.fold_in(key, 1), (cfg.d_model, vp))
+    return p
+
+
+def mask_pad_logits(cfg: ModelConfig, logits: jax.Array) -> jax.Array:
+    """Suppress the padded vocab region (iota compare — fuses, no big mask)."""
+    if cfg.vocab_padded == cfg.vocab:
+        return logits
+    ids = lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(ids < cfg.vocab, logits, BIG_NEG)
+
+
+def embed_tokens(p: Params, cfg: ModelConfig, tokens: jax.Array, dtype) -> jax.Array:
+    return p["table"].astype(dtype)[tokens] * math.sqrt(cfg.d_model)
+
+
+def lm_logits(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tied_embeddings:
+        w = p["table"].astype(x.dtype).T
+    else:
+        w = p["head"].astype(x.dtype)
+    return jnp.einsum("bsd,dv->bsv", x, w)

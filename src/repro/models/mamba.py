@@ -1,0 +1,235 @@
+"""Mamba-2 (SSD — state-space duality) mixer, chunked-scan formulation.
+
+Forward (training/prefill): the SSD block decomposition — intra-chunk
+quadratic attention-like term + inter-chunk state recurrence carried by an
+exclusive ``lax.associative_scan`` over chunks.  All chunk math is einsum
+(MXU-shaped); the recurrence is over ``S / chunk`` steps only.
+
+Decode: O(1) per token — the recurrent update
+``state = a * state + dt * B x``; the cache is the ``[B, H, hd, d_state]``
+state plus the depthwise-conv tail, independent of context length.  This is
+what makes ``long_500k`` runnable for ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import _dense_init, init_norm, apply_norm
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return s, d_inner, n_heads
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    s, d_inner, n_heads = _dims(cfg)
+    d = cfg.d_model
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 4)
+    return {
+        # fused in_proj: z (gate), x, B, C, dt
+        "in_proj": _dense_init(
+            ks[0], (d, 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads)
+        ),
+        "conv_w": _dense_init(ks[1], (s.d_conv, conv_dim), scale=1.0 / math.sqrt(s.d_conv)),
+        "conv_b": jnp.zeros((conv_dim,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)),
+        "D": jnp.ones((n_heads,)),
+        "dt_bias": jnp.zeros((n_heads,)),
+        "out_norm": init_norm(cfg, d_inner),
+        "out_proj": _dense_init(ks[2], (d_inner, d)),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    s, d_inner, n_heads = _dims(cfg)
+    g = s.n_groups * s.d_state
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * g], axis=-1)
+    return z, xbc, dt  # xbc feeds the conv; dt is per-head
+
+
+def _conv_causal(xbc: jax.Array, w: jax.Array, b: jax.Array, tail: jax.Array | None):
+    """Depthwise causal conv along S.  xbc: [B, S, C]; w: [K, C].
+    ``tail`` is the previous K-1 inputs for decode continuity."""
+    K = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = tail.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # [B, S+K-1, C]
+    out = sum(xp[:, k : k + xbc.shape[1], :] * w[k].astype(xbc.dtype) for k in range(K))
+    new_tail = xp[:, -(K - 1) :, :]
+    return jax.nn.silu(out + b.astype(xbc.dtype)), new_tail
+
+
+def ssd_chunked(
+    cfg: ModelConfig,
+    xh: jax.Array,  # [B, S, H, hd]
+    dt: jax.Array,  # [B, S, H] (softplus'd, >0)
+    A: jax.Array,  # [H] (positive decay rates)
+    Bm: jax.Array,  # [B, S, G, N]
+    Cm: jax.Array,  # [B, S, G, N]
+    init_state: jax.Array | None = None,  # [B, H, hd, N]
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y [B,S,H,hd], final_state [B,H,hd,N])."""
+    s = cfg.ssm
+    B_, S, H, hd = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(s.chunk, S)
+    S_orig = S
+    if S % Q:  # pad ragged tails: dt=0 -> unit decay, zero contribution
+        pad = Q - S % Q
+        z = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        xh, dt, Bm, Cm = z(xh), z(dt), z(Bm), z(Cm)
+        S = S + pad
+    nC = S // Q
+    rep = H // G
+    # expand groups to heads
+    Bh = jnp.repeat(Bm, rep, axis=2)  # [B, S, H, N]
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    # per-step log decay: l_t = -dt_t * A   (A > 0)
+    ldec = (-dt * A[None, None, :]).astype(jnp.float32)  # [B, S, H]
+    ldec_c = ldec.reshape(B_, nC, Q, H)
+    # dt-weighted input in the compute dtype (dt itself stays f32 for the
+    # decay exponentials; only the weighting is cast)
+    xc = (xh * dt.astype(xh.dtype)[..., None]).reshape(B_, nC, Q, H, hd)
+    Bc = Bh.reshape(B_, nC, Q, H, N)
+    Cc = Ch.reshape(B_, nC, Q, H, N)
+
+    cum = jnp.cumsum(ldec_c, axis=2)  # [B, nC, Q, H] inclusive
+    total = cum[:, :, -1, :]  # [B, nC, H] chunk total decay
+
+    # ---- intra-chunk (causal attention-like) -----------------------------
+    # L[i, j] = exp(cum_i - cum_j) for i >= j  (decay between j and i).
+    # The exp argument is clamped BEFORE exp on masked entries: exp of the
+    # (positive) upper-triangle values would overflow and poison the
+    # backward pass through jnp.where (0 * inf = NaN).
+    li = cum[:, :, :, None, :]  # [B,nC,Q,1,H]
+    lj = cum[:, :, None, :, :]  # [B,nC,1,Q,H]
+    mask = jnp.tril(jnp.ones((Q, Q), jnp.bool_))[None, None, :, :, None]
+    larg = jnp.where(mask, li - lj, -1e30)
+    Lmat = jnp.where(mask, jnp.exp(larg), 0.0)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", Cc, Bc) * Lmat.astype(xh.dtype)
+    y_intra = jnp.einsum("bcqkh,bckhd->bcqhd", scores, xc)
+
+    # ---- chunk states -----------------------------------------------------
+    # state contribution of chunk c: sum_j exp(total - cum_j) * B_j x_j^T
+    w_end = jnp.exp(total[:, :, None, :] - cum)  # [B,nC,Q,H] decay to chunk end
+    chunk_state = jnp.einsum("bcqh,bcqhn,bcqhd->bchdn", w_end.astype(xh.dtype), Bc, xc)
+
+    # ---- inter-chunk recurrence over chunks (associative scan) ------------
+    # state_{c} = exp(total_c) * state_{c-1} + chunk_state_c
+    decay = jnp.exp(total).astype(jnp.float32)  # [B, nC, H]
+
+    def comb(a, b):
+        da, sa = a
+        db, sb = b
+        return da * db, sb + sa * db[..., None, None]
+
+    st0 = chunk_state.astype(jnp.float32)
+    if init_state is not None:
+        st0 = st0.at[:, 0].add(
+            decay[:, 0][..., None, None] * init_state.astype(jnp.float32)
+        )
+    dec_scan, st_scan = lax.associative_scan(
+        comb, (decay, st0), axis=1
+    )  # inclusive: st_scan[c] = state after chunk c
+    final_state = st_scan[:, -1]
+    # exclusive shift: state entering chunk c
+    st_in = jnp.concatenate(
+        [
+            (init_state if init_state is not None else jnp.zeros_like(final_state))[
+                :, None
+            ].astype(jnp.float32),
+            st_scan[:, :-1],
+        ],
+        axis=1,
+    )  # [B, nC, H, hd, N]
+
+    # ---- inter-chunk output: C_i . (decay to i) . state_in ----------------
+    w_in = jnp.exp(cum)  # decay from chunk start to position i (inclusive of i)
+    y_inter = jnp.einsum(
+        "bcqhn,bchdn,bcqh->bcqhd", Cc, st_in.astype(xh.dtype), w_in.astype(xh.dtype)
+    )
+    y = (y_intra + y_inter).reshape(B_, S, H, hd)
+    return y[:, :S_orig], final_state.astype(xh.dtype)
+
+
+def apply_mamba(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, S, d]
+    state: Tuple[jax.Array, jax.Array] | None = None,  # (ssm_state, conv_tail)
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence forward (training/prefill).  Returns (y, new_state)."""
+    s, d_inner, n_heads = _dims(cfg)
+    B, S, d = x.shape
+    proj = jnp.einsum("bsd,dp->bsp", x, p["in_proj"].astype(x.dtype))
+    z, xbc, dt = _split_proj(cfg, proj)
+    ssm_state = state[0] if state is not None else None
+    tail = state[1] if state is not None else None
+    xbc, new_tail = _conv_causal(xbc, p["conv_w"], p["conv_b"], tail)
+    g = s.n_groups * s.d_state
+    xi, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + g], axis=-1)
+    xh = xi.reshape(B, S, n_heads, s.head_dim)
+    Bm = Bm.reshape(B, S, s.n_groups, s.d_state)
+    Cm = Cm.reshape(B, S, s.n_groups, s.d_state)
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    A = jnp.exp(p["A_log"])  # [H] > 0
+    y, new_ssm = ssd_chunked(cfg, xh, dt_act, A, Bm, Cm, ssm_state)
+    y = y.astype(x.dtype) + xh * p["D"].astype(x.dtype)[None, None, :, None]  # skip
+    y = y.reshape(B, S, d_inner) * jax.nn.silu(z)
+    y = apply_norm(p["out_norm"], y)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x.dtype))
+    return out.astype(x.dtype), (new_ssm, new_tail)
+
+
+def decode_step_mamba(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, 1, d]
+    state: Tuple[jax.Array, jax.Array],  # (ssm_state [B,H,hd,N], conv_tail [B,K-1,C])
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """O(1) recurrent decode step."""
+    s, d_inner, n_heads = _dims(cfg)
+    B = x.shape[0]
+    ssm_state, tail = state
+    proj = jnp.einsum("bsd,dp->bsp", x, p["in_proj"].astype(x.dtype))
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, new_tail = _conv_causal(xbc, p["conv_w"], p["conv_b"], tail)
+    g = s.n_groups * s.d_state
+    xi, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + g], axis=-1)
+    xh = xi.reshape(B, n_heads, s.head_dim)
+    Bm = jnp.repeat(Bm.reshape(B, s.n_groups, s.d_state), n_heads // s.n_groups, axis=1)
+    Cm = jnp.repeat(Cm.reshape(B, s.n_groups, s.d_state), n_heads // s.n_groups, axis=1)
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32).reshape(B, n_heads) + p["dt_bias"])
+    A = jnp.exp(p["A_log"])
+    a = jnp.exp(-dt_act * A[None, :])  # [B, H]
+    upd = jnp.einsum("bhd,bhn->bhdn", xh * dt_act[..., None].astype(x.dtype), Bm)
+    new_ssm = a[..., None, None].astype(x.dtype) * ssm_state + upd
+    y = jnp.einsum("bhdn,bhn->bhd", new_ssm, Cm) + xh * p["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(B, 1, d_inner) * jax.nn.silu(z)
+    y = apply_norm(p["out_norm"], y)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x.dtype))
+    return out.astype(x.dtype), (new_ssm, new_tail)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> Tuple[jax.Array, jax.Array]:
+    s, d_inner, n_heads = _dims(cfg)
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    ssm = jnp.zeros((batch, n_heads, s.head_dim, s.d_state), dtype)
+    tail = jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype)
+    return ssm, tail

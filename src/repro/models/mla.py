@@ -1,0 +1,154 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and keys/values are produced through low-rank latents:
+
+* ``q = W_uq . norm(W_dq . x)`` with per-head (nope ++ rope) split;
+* ``kv latent c = norm(W_dkv . x)`` cached at ``kv_lora_rank`` floats/token
+  (+ a decoupled rope key of ``qk_rope_dim``) — this is MLA's memory win:
+  the cache is ``r + dr`` per token instead of ``2 * H * hd``;
+* at attention time the latent is up-projected to per-head K (nope) and V.
+
+The decode path therefore caches (c_kv [B, S, r], k_rope [B, S, dr]) only.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import BIG_NEG, _dense_init, apply_norm, apply_rope, init_norm
+
+Params = Dict[str, Any]
+
+
+def init_mla(key, cfg: ModelConfig) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wdq": _dense_init(ks[0], (d, m.q_lora_rank)),
+        "q_norm": init_norm(cfg, m.q_lora_rank),
+        "wuq": _dense_init(ks[1], (m.q_lora_rank, h * qk)),
+        "wdkv": _dense_init(ks[2], (d, m.kv_lora_rank)),
+        "wk_rope": _dense_init(ks[3], (d, m.qk_rope_dim)),
+        "kv_norm": init_norm(cfg, m.kv_lora_rank),
+        "wukv": _dense_init(ks[4], (m.kv_lora_rank, h * (m.qk_nope_dim + m.v_head_dim))),
+        "wo": _dense_init(ks[5], (h * m.v_head_dim, d)),
+    }
+
+
+def apply_mla_absorbed(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, 1, d] (decode)
+    positions: jax.Array,  # [B, 1]
+    mask: jax.Array,  # [B, 1, Sk] bool
+    latents: Tuple[jax.Array, jax.Array],  # cached (c_kv [B,S,r], k_rope [B,S,dr])
+) -> jax.Array:
+    """Absorbed-matmul MLA decode (§Perf hillclimb D).
+
+    The naive decode up-projects the WHOLE latent cache to per-head K/V every
+    step: 2*S*r*H*(nope+v) FLOPs and S*H*(nope+v) bytes of traffic.  Folding
+    W_uk into the query and W_uv into the output projection keeps all
+    S-proportional work in the r-dim latent space:
+
+        scores = (q_nope W_uk^T) . c_kv + q_rope . k_rope
+        ctx    = (probs . c_kv) W_uv
+
+    S-proportional FLOPs drop from 2*S*H*r*(nope+v) to 4*S*H*r, and the
+    cache is read ONCE at its compressed width (r+dr ~ 576 floats/token vs
+    H*(nope+v) = 32768 for deepseek-v3) — exactly MLA's stated design point.
+    Algebraically identical to apply_mla (tests assert allclose).
+    """
+    m = cfg.mla
+    B, Sq, d = x.shape
+    h = cfg.n_heads
+    c_kv, k_rope = latents
+    q_lat = apply_norm(p["q_norm"], jnp.einsum("bsd,dr->bsr", x, p["wdq"].astype(x.dtype)))
+    q = jnp.einsum("bsr,rh->bsh", q_lat, p["wuq"].astype(x.dtype))
+    q = q.reshape(B, Sq, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    wukv = p["wukv"].astype(x.dtype).reshape(
+        m.kv_lora_rank, h, m.qk_nope_dim + m.v_head_dim
+    )
+    wuk, wuv = wukv[..., : m.qk_nope_dim], wukv[..., m.qk_nope_dim :]
+    q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, wuk)  # absorb W_uk into q
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_abs, c_kv)
+        + jnp.einsum("bshe,bte->bhst", q_rope, k_rope)
+    ) * scale
+    if mask is not None:
+        scores = jnp.where(mask[:, None, :, :], scores, BIG_NEG)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv)  # stay in latent space
+    ctx = jnp.einsum("bshr,rhv->bshv", ctx_lat, wuv).reshape(B, Sq, h * m.v_head_dim)
+    return jnp.einsum("bsh,hd->bsd", ctx, p["wo"].astype(x.dtype))
+
+
+def mla_latents(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    """Compute the cacheable latents for a token block: (c_kv, k_rope)."""
+    m = cfg.mla
+    c_kv = apply_norm(p["kv_norm"], jnp.einsum("bsd,dr->bsr", x, p["wdkv"].astype(x.dtype)))
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["wk_rope"].astype(x.dtype))
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def apply_mla(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, Sq, d]
+    positions: jax.Array,  # [B, Sq]
+    mask: Optional[jax.Array],  # [B, Sq, Sk] bool (None = no masking)
+    latents: Optional[Tuple[jax.Array, jax.Array]] = None,  # cached (c_kv, k_rope)
+    flash: Optional[dict] = None,  # {causal, window, prefix_len}
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    from .layers import flash_attention  # local import avoids cycle
+
+    m = cfg.mla
+    B, Sq, d = x.shape
+    h = cfg.n_heads
+    if latents is None:
+        latents = mla_latents(p, cfg, x, positions)
+    c_kv, k_rope = latents  # [B, Sk, r], [B, Sk, dr]
+
+    q_lat = apply_norm(p["q_norm"], jnp.einsum("bsd,dr->bsr", x, p["wdq"].astype(x.dtype)))
+    q = jnp.einsum("bsr,rh->bsh", q_lat, p["wuq"].astype(x.dtype))
+    q = q.reshape(B, Sq, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("btr,rh->bth", c_kv, p["wukv"].astype(x.dtype))
+    kv = kv.reshape(B, -1, h, m.qk_nope_dim + m.v_head_dim)
+    k_nope, v = kv[..., : m.qk_nope_dim], kv[..., m.qk_nope_dim :]
+
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    if flash is not None:
+        # fold the shared rope key into per-head keys: scores = qf . kf
+        Sk = k_nope.shape[1]
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :]  # g=1
+        kf = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, Sk, h, m.qk_rope_dim))],
+            axis=-1,
+        )
+        ctx = flash_attention(
+            qf, kf, v, positions, positions, scale=scale, **flash
+        ).reshape(B, Sq, h * m.v_head_dim)
+    else:
+        scores = (
+            jnp.einsum("bsnh,btnh->bnst", q_nope, k_nope)
+            + jnp.einsum("bsnh,bth->bnst", q_rope, k_rope)  # rope key shared per head
+        ) * scale
+        if mask is not None:
+            scores = jnp.where(mask[:, None, :, :], scores, BIG_NEG)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bnst,btnh->bsnh", probs, v).reshape(B, Sq, h * m.v_head_dim)
+    out = jnp.einsum("bsh,hd->bsd", ctx, p["wo"].astype(x.dtype))
+    return out, latents

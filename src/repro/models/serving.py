@@ -1,0 +1,306 @@
+"""Serving path: prefill + single-token decode against static caches.
+
+Cache design (mirroring the stage plan, see transformer.build_plan):
+
+* global attention — ``(k, v)`` ``[B, S_cap, kvH, hd]`` plus a ``k_pos``
+  validity array; one token is written per step at slot ``pos``.
+* sliding-window attention — ring buffer of ``min(S_cap, window)`` slots,
+  written at ``pos % window``; ``k_pos`` makes ring wraparound correct.
+  For ``long_500k`` on SWA archs this is the difference between a 4 K-slot
+  cache and a 500 K-slot one.
+* MLA — compressed latents ``(c_kv [B, S_cap, r], k_rope [B, S_cap, dr])``:
+  MLA's raison d'etre — the per-token cache is ``r + dr`` floats, not
+  ``2*H*hd``.
+* SSM — ``(ssm_state, conv_tail)``: O(1) in context length.
+* whisper cross-attention — encoder K/V computed once at prefill, static
+  during decode.
+
+``decode_step`` is the function the decode_32k / long_500k dry-run cells
+lower: one new token against a ``seq_len``-capacity cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from . import mamba as M
+from . import mla as MLA
+from . import moe as MOE
+from .config import ModelConfig
+from .transformer import GroupSpec, Stage, _sinusoid, build_plan
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+# §Perf: absorbed-matmul MLA decode (see mla.apply_mla_absorbed).  Exact;
+# default ON.  Set False to lower the naive cache-up-projection baseline.
+MLA_ABSORBED = {"enabled": True}
+
+
+def _cache_len(cfg: ModelConfig, g: GroupSpec, s_cap: int) -> int:
+    if g.kind == "attn" and not g.is_global and cfg.sliding_window:
+        return min(s_cap, cfg.sliding_window)
+    return s_cap
+
+
+def _layer_cache(cfg: ModelConfig, g: GroupSpec, batch: int, s_cap: int, dtype) -> Cache:
+    L_c = _cache_len(cfg, g, s_cap)
+    if g.kind == "ssm":
+        ssm, tail = M.init_mamba_state(cfg, batch, dtype)
+        return {"ssm": ssm, "conv": tail}
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((batch, L_c, m.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, L_c, m.qk_rope_dim), dtype),
+            "kpos": jnp.full((batch, L_c), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, L_c, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, L_c, cfg.n_kv_heads, cfg.hd), dtype),
+        "kpos": jnp.full((batch, L_c), -1, jnp.int32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_cap: int, dtype=jnp.bfloat16) -> Cache:
+    """Build the full decode cache (zeros / invalid positions)."""
+    plan = build_plan(cfg)
+    stages = []
+    for st in plan:
+        per_spec = []
+        for g in st.specs:
+            if st.reps == 1:
+                per_spec.append(_layer_cache(cfg, g, batch, s_cap, dtype))
+            else:
+                per_spec.append(
+                    jax.tree.map(
+                        lambda *xs: jnp.stack(xs),
+                        *[_layer_cache(cfg, g, batch, s_cap, dtype) for _ in range(st.reps)],
+                    )
+                )
+        stages.append(tuple(per_spec))
+    cache: Cache = {"stages": stages, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.encoder_layers:
+        cache["enc_kv"] = jnp.zeros(
+            (cfg.n_layers, 2, batch, cfg.encoder_tokens, cfg.n_kv_heads, cfg.hd), dtype
+        )
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# single-layer decode
+# ---------------------------------------------------------------------------
+
+def _decode_attn(p, cfg: ModelConfig, g: GroupSpec, x, pos, c):
+    """x: [B, 1, d]; pos: [] int32 (current position).  Returns (out, c)."""
+    B = x.shape[0]
+    L_c = c["kpos"].shape[1]
+    slot = pos % L_c
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    use_rope = cfg.rope_theta > 0 and not cfg.encoder_layers
+    k_new = jnp.einsum("bsd,dh->bsh", x, p["attn"]["wk"].astype(x.dtype))
+    v_new = jnp.einsum("bsd,dh->bsh", x, p["attn"]["wv"].astype(x.dtype))
+    if "bk" in p["attn"]:
+        k_new = k_new + p["attn"]["bk"].astype(x.dtype)
+        v_new = v_new + p["attn"]["bv"].astype(x.dtype)
+    k_new = k_new.reshape(B, 1, kvh, hd)
+    v_new = v_new.reshape(B, 1, kvh, hd)
+    if use_rope:
+        k_new = L.apply_rope(k_new, positions, cfg.rope_theta)
+    k = lax.dynamic_update_slice(c["k"], k_new.astype(c["k"].dtype), (0, slot, 0, 0))
+    v = lax.dynamic_update_slice(c["v"], v_new.astype(c["v"].dtype), (0, slot, 0, 0))
+    kpos = lax.dynamic_update_slice(
+        c["kpos"], jnp.broadcast_to(pos[None, None], (B, 1)), (0, slot)
+    )
+    ok = (kpos >= 0) & (kpos <= pos)
+    if not g.is_global and cfg.sliding_window:
+        ok &= kpos > pos - cfg.sliding_window
+    out, _ = L.apply_attention(
+        p["attn"], cfg, x, positions, ok[:, None, :], kv=(k, v), use_rope=use_rope
+    )
+    return out, {"k": k, "v": v, "kpos": kpos}
+
+
+def _decode_mla(p, cfg: ModelConfig, x, pos, c):
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    ckv_new, krope_new = MLA.mla_latents(p["mla"], cfg, x, positions)
+    L_c = c["kpos"].shape[1]
+    slot = pos % L_c
+    ckv = lax.dynamic_update_slice(c["ckv"], ckv_new.astype(c["ckv"].dtype), (0, slot, 0))
+    krope = lax.dynamic_update_slice(
+        c["krope"], krope_new.astype(c["krope"].dtype), (0, slot, 0)
+    )
+    kpos = lax.dynamic_update_slice(
+        c["kpos"], jnp.broadcast_to(pos[None, None], (B, 1)), (0, slot)
+    )
+    ok = (kpos >= 0) & (kpos <= pos)
+    if MLA_ABSORBED["enabled"]:
+        out = MLA.apply_mla_absorbed(
+            p["mla"], cfg, x, positions, ok[:, None, :], latents=(ckv, krope)
+        )
+    else:
+        out, _ = MLA.apply_mla(
+            p["mla"], cfg, x, positions, ok[:, None, :], latents=(ckv, krope)
+        )
+    return out, {"ckv": ckv, "krope": krope, "kpos": kpos}
+
+
+def _decode_mixer(p, cfg: ModelConfig, g: GroupSpec, x, pos, c):
+    h = L.apply_norm(p["norm_mix"], x)
+    if g.kind == "ssm":
+        mix, (ssm, tail) = M.decode_step_mamba(p["ssm"], cfg, h, (c["ssm"], c["conv"]))
+        c = {"ssm": ssm, "conv": tail}
+    elif cfg.mla is not None:
+        mix, c = _decode_mla(p, cfg, h, pos, c)
+    else:
+        mix, c = _decode_attn(p, cfg, g, h, pos, c)
+    return x + mix, c
+
+
+def _decode_ffn(p, cfg: ModelConfig, g: GroupSpec, x, ep_axis):
+    if "norm_ffn" not in p:  # FFN-free block (pure mamba2)
+        return x
+    h = L.apply_norm(p["norm_ffn"], x)
+    if g.has_moe:
+        f, _ = MOE.apply_moe(p["moe"], cfg, h, ep_axis)
+    else:
+        f = L.apply_ffn(p["ffn"], cfg, h)
+    return x + f
+
+
+def _decode_layer(p, cfg: ModelConfig, g: GroupSpec, x, pos, c, ep_axis):
+    x, c = _decode_mixer(p, cfg, g, x, pos, c)
+    return _decode_ffn(p, cfg, g, x, ep_axis), c
+
+
+def _decode_cross(cp, cfg, x, enc_kv):
+    B = x.shape[0]
+    k, v = enc_kv[0], enc_kv[1]
+    positions = jnp.zeros((B, 1), jnp.int32)
+    h = L.apply_norm(cp["norm"], x)
+    out, _ = L.apply_attention(
+        cp["attn"], cfg, h, positions, None, kv=(k, v), use_rope=False
+    )
+    return x + out
+
+
+# ---------------------------------------------------------------------------
+# decode step (the decode_32k / long_500k dry-run entry point)
+# ---------------------------------------------------------------------------
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    cache: Cache,
+    token: jax.Array,  # [B, 1] int32
+    ep_axis: Optional[str] = "model",
+) -> Tuple[jax.Array, Cache]:
+    """One decode step: returns (logits [B, 1, V], updated cache)."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    pos = cache["pos"]
+    x = L.embed_tokens(params["embed"], cfg, token, dtype)
+    if cfg.encoder_layers:
+        d = cfg.d_model
+        tbl = _sinusoid(65536, d, dtype)
+        x = x + lax.dynamic_slice(tbl, (jnp.minimum(pos, 65535), 0), (1, d))[None]
+    plan = build_plan(cfg)
+    new_stages = []
+    if cfg.encoder_layers:
+        (st,) = plan
+        g = st.specs[0]
+        sp = params["stages"][0][0]
+        cc = cache["stages"][0][0]
+
+        def body(carry, pp_c, g=g):
+            pp, c1, xp, ekv = pp_c
+            # whisper layer order: self-attn -> cross-attn -> FFN
+            y, nc = _decode_mixer(pp, cfg, g, carry, pos, c1)
+            y = _decode_cross(xp, cfg, y, ekv)
+            y = _decode_ffn(pp, cfg, g, y, ep_axis)
+            return y, nc
+
+        x, nc = lax.scan(body, x, (sp, cc, params["cross"], cache["enc_kv"]))
+        new_stages.append((nc,))
+    else:
+        for st, sp, sc in zip(plan, params["stages"], cache["stages"]):
+            if st.reps == 1:
+                ncs = []
+                for g, pp, c1 in zip(st.specs, sp, sc):
+                    x, nc = _decode_layer(pp, cfg, g, x, pos, c1, ep_axis)
+                    ncs.append(nc)
+                new_stages.append(tuple(ncs))
+            else:
+
+                def body(carry, pp_c, st=st):
+                    pps, cs = pp_c
+                    ncs = []
+                    for g, pp, c1 in zip(st.specs, pps, cs):
+                        carry, nc = _decode_layer(pp, cfg, g, carry, pos, c1, ep_axis)
+                        ncs.append(nc)
+                    return carry, tuple(ncs)
+
+                x, ncs = lax.scan(body, x, (sp, sc))
+                new_stages.append(ncs)
+    x = L.apply_norm(params["final_norm"], x)
+    logits = L.lm_logits(params["embed"], cfg, x)
+    new_cache: Cache = {"stages": new_stages, "pos": pos + 1}
+    if cfg.encoder_layers:
+        new_cache["enc_kv"] = cache["enc_kv"]
+    return logits, new_cache
+
+
+def prefill_encoder(params: Params, cfg: ModelConfig, frames: jax.Array, cache: Cache) -> Cache:
+    """Whisper: run the encoder once and stage cross-attn K/V into the cache."""
+    from .transformer import _run_encoder
+
+    enc = _run_encoder(params, cfg, frames)
+    B, T, d = enc.shape
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    kvs = []
+    for li in range(cfg.n_layers):
+        cp = jax.tree.map(lambda x: x[li], params["cross"])
+        k = jnp.einsum("btd,dh->bth", enc, cp["attn"]["wk"].astype(enc.dtype)).reshape(
+            B, T, kvh, hd
+        )
+        v = jnp.einsum("btd,dh->bth", enc, cp["attn"]["wv"].astype(enc.dtype)).reshape(
+            B, T, kvh, hd
+        )
+        kvs.append(jnp.stack([k, v]))
+    cache = dict(cache)
+    cache["enc_kv"] = jnp.stack(kvs).astype(cache["enc_kv"].dtype)
+    return cache
+
+
+def greedy_generate(
+    params: Params,
+    cfg: ModelConfig,
+    prompt: jax.Array,  # [B, P]
+    steps: int,
+    s_cap: int,
+    ep_axis=None,
+    frontend_embeds=None,
+) -> jax.Array:
+    """Greedy decode loop for tests/examples (prefill via repeated decode)."""
+    B, P = prompt.shape
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    cache = init_cache(cfg, B, s_cap, dtype)
+    if cfg.encoder_layers:
+        cache = prefill_encoder(params, cfg, frontend_embeds.astype(dtype), cache)
+    step = jax.jit(functools.partial(decode_step, cfg=cfg, ep_axis=ep_axis))
+    tok = prompt[:, :1]
+    outs = []
+    for t in range(P + steps - 1):
+        logits, cache = step(params, cache=cache, token=tok)
+        logits = logits[..., : cfg.vocab]  # drop TP-padding region
+        nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        tok = prompt[:, t + 1 : t + 2] if t + 1 < P else nxt
+        if t + 1 >= P:
+            outs.append(nxt)
+    return jnp.concatenate(outs, axis=1) if outs else jnp.zeros((B, 0), jnp.int32)

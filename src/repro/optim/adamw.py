@@ -1,0 +1,96 @@
+"""AdamW with global-norm clipping, built from scratch (no optax dependency).
+
+Optimizer state shards exactly like the parameters (the sharding plan maps
+every ``m``/``v`` leaf to its parameter's PartitionSpec), which combined with
+FSDP parameter sharding gives ZeRO-3 semantics for the 398 B / 671 B configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def init(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_schedule(cfg: AdamWConfig, step) -> jax.Array:
+    """Linear warmup + cosine decay to ``min_lr_frac * lr``."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.minimum(warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def update(
+    grads, opt_state, params, cfg: AdamWConfig
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step.  Returns (new_params, new_opt_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = opt_state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    # flatten/unflatten (param trees contain tuples, so is_leaf tricks on the
+    # mapped output would mis-fire)
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = jax.tree.leaves(grads)
+    leaves_m = jax.tree.leaves(opt_state["m"])
+    leaves_v = jax.tree.leaves(opt_state["v"])
+    res = [upd(p, g, m, v) for p, g, m, v in zip(leaves_p, leaves_g, leaves_m, leaves_v)]
+    new_params = treedef.unflatten([r[0] for r in res])
+    new_m = treedef.unflatten([r[1] for r in res])
+    new_v = treedef.unflatten([r[2] for r in res])
+    return (
+        new_params,
+        {"m": new_m, "v": new_v, "step": step},
+        {"grad_norm": gnorm, "lr": lr},
+    )

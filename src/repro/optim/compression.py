@@ -1,0 +1,71 @@
+"""Gradient compression hooks for the DP all-reduce (distributed-optimization
+trick for 1000+ node scale).
+
+Top-k sparsification with error feedback: only the largest-magnitude k
+fraction of each gradient tensor crosses the interconnect; the residual is
+fed back into the next step's gradient (Stich et al., memory-compensated
+SGD).  This composes with the paper's worldview: a top-k-sparsified gradient
+*is* a hypersparse update stream, and the residual accumulator plays the role
+of the hierarchy's fast layer.
+
+``compress -> (allreduce) -> decompress`` is exposed as a pair so the train
+step can wrap its ``psum``; on CPU tests we verify the algebra end-to-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    enabled: bool = False
+    top_k_frac: float = 0.01  # fraction of entries communicated
+    min_size: int = 16_384  # don't compress small tensors
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _topk_mask(x: jax.Array, k: int) -> jax.Array:
+    flat = jnp.abs(x.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def compress(grads, residual, cfg: CompressionConfig):
+    """Returns (sparse_grads, new_residual).  sparse + residual == grads + old
+    residual (lossless bookkeeping; only sparse crosses the wire)."""
+    if not cfg.enabled:
+        return grads, residual
+
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        if g.size < cfg.min_size:
+            return g, jnp.zeros_like(g)
+        k = max(1, int(g.size * cfg.top_k_frac))
+        mask = _topk_mask(g, k)
+        sparse = g * mask
+        return sparse, g - sparse
+
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_r = jax.tree.leaves(residual)
+    res = [one(g, r) for g, r in zip(leaves_g, leaves_r)]
+    return treedef.unflatten([t[0] for t in res]), treedef.unflatten(
+        [t[1] for t in res]
+    )
+
+
+def comm_bytes_saved(params, cfg: CompressionConfig) -> int:
+    """Napkin accounting used by the roofline analysis."""
+    if not cfg.enabled:
+        return 0
+    total = 0
+    for p in jax.tree.leaves(params):
+        if p.size >= cfg.min_size:
+            total += int(p.size * 4 * (1 - cfg.top_k_frac))
+    return total

@@ -1,0 +1,1 @@
+from . import hier_grad, row_accum  # noqa: F401

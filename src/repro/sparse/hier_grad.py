@@ -1,0 +1,97 @@
+"""Hierarchical sparse embedding-gradient training integration.
+
+The paper's technique as a first-class LM-training feature (DESIGN.md 3.4):
+
+* the input-embedding table is treated as a *streamed-update* parameter:
+  each microbatch contributes hypersparse ``(token_id, grad_row)`` pairs
+  (<= B*S distinct ids out of a 32 K-262 K vocab);
+* pairs are ingested into a :class:`repro.sparse.row_accum.HierRowAccum`
+  cascade — layer 1 absorbs the microbatch in fast memory, cuts amortize
+  merges of the (Zipf-hot) id space exactly as in the paper;
+* once per optimizer step the cascade is flushed: a *row-sparse AdamW*
+  update touches only the flushed rows of (param, m, v) — the
+  ``scatter_add``-kernel path — instead of a dense [V, d] triple-update.
+
+Correctness note: sparse-AdamW is NOT bit-identical to dense AdamW (rows not
+touched this step skip their m/v decay — the standard "lazy Adam" semantics
+used by every production embedding system).  ``tests/test_sparse.py``
+verifies (a) the accumulated gradient is exact, and (b) lazy-AdamW == dense
+AdamW whenever every row is touched.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, lr_schedule
+from . import row_accum as RA
+
+
+@dataclasses.dataclass(frozen=True)
+class HierGradConfig:
+    cuts: Tuple[int, ...] = (8192, 65536)
+    top_capacity: int = 1 << 20
+    enabled: bool = True
+
+
+def init_accumulator(cfg: HierGradConfig, tokens_per_micro: int, d: int) -> RA.HierRowAccum:
+    return RA.hier_init(
+        cfg.cuts, top_capacity=cfg.top_capacity, batch=tokens_per_micro, d=d
+    )
+
+
+def accumulate_microbatch(
+    acc: RA.HierRowAccum,
+    token_ids: jax.Array,  # [B, S]
+    grad_rows: jax.Array,  # [B, S, d] cotangent of the gathered embeddings
+    cfg: HierGradConfig,
+) -> RA.HierRowAccum:
+    ids = token_ids.reshape(-1)
+    rows = grad_rows.reshape(ids.shape[0], -1)
+    return RA.hier_update(acc, ids, rows, cfg.cuts)
+
+
+def sparse_adamw_row_update(
+    flushed: RA.RowAccum,
+    table: jax.Array,  # [V, d]
+    m: jax.Array,  # [V, d]
+    v: jax.Array,  # [V, d]
+    step: jax.Array,
+    opt: AdamWConfig,
+    scale: float = 1.0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Lazy AdamW on exactly the touched rows (gather -> update -> scatter)."""
+    ids = flushed.ids
+    live = ids != RA.PAD
+    gather_idx = jnp.where(live, ids, 0)
+    # pads route OUT OF BOUNDS so mode="drop" discards them — a masked .set
+    # with duplicate in-bounds indices would let a pad's no-op write clobber
+    # a live row's update (scatter duplicate order is last-wins).
+    scatter_idx = jnp.where(live, ids, table.shape[0])
+    g = flushed.rows * scale
+    m_rows = m[gather_idx]
+    v_rows = v[gather_idx]
+    p_rows = table[gather_idx]
+    step_f = (step + 1).astype(jnp.float32)
+    lr = lr_schedule(opt, step + 1)
+    m2 = opt.b1 * m_rows + (1 - opt.b1) * g
+    v2 = opt.b2 * v_rows + (1 - opt.b2) * g * g
+    mhat = m2 / (1 - opt.b1**step_f)
+    vhat = v2 / (1 - opt.b2**step_f)
+    delta = mhat / (jnp.sqrt(vhat) + opt.eps) + opt.weight_decay * p_rows.astype(
+        jnp.float32
+    )
+    p_new = (p_rows.astype(jnp.float32) - lr * delta).astype(table.dtype)
+    table = table.at[scatter_idx].set(p_new, mode="drop")
+    m = m.at[scatter_idx].set(m2, mode="drop")
+    v = v.at[scatter_idx].set(v2, mode="drop")
+    return table, m, v
+
+
+def dense_grad_of(acc_flushed: RA.RowAccum, vocab: int) -> jax.Array:
+    """Materialize the accumulated sparse gradient (tests / comparison)."""
+    return RA.to_dense(acc_flushed, vocab)

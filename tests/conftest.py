@@ -1,0 +1,15 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS device-count forcing here —
+smoke tests and benches must see the real single CPU device; only
+``launch/dryrun.py`` (run as a script) forces 512 placeholder devices."""
+import jax
+import numpy as np
+import pytest
+
+# persistent compilation cache: repeated pytest runs skip recompiles
+jax.config.update("jax_compilation_cache_dir", "/tmp/jax_cache")
+jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.3)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

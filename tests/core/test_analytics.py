@@ -1,0 +1,72 @@
+"""Graph-analytics-on-assoc tests vs networkx ground truth."""
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core import analytics, assoc
+from repro.core.assoc import PAD
+
+
+@pytest.fixture(scope="module")
+def graph():
+    g = nx.gnm_random_graph(24, 60, seed=7)
+    edges = np.asarray(g.edges, np.int32)
+    # directed COO of the undirected graph (both orientations)
+    r = np.concatenate([edges[:, 0], edges[:, 1]])
+    c = np.concatenate([edges[:, 1], edges[:, 0]])
+    a = assoc.from_triples(
+        jnp.asarray(r), jnp.asarray(c), jnp.ones((len(r),)), cap=256
+    )
+    return g, a
+
+
+def test_degrees(graph):
+    g, a = graph
+    out_deg, in_deg = analytics.degrees(a)
+    for v in g.nodes:
+        want = g.degree(v)
+        got = float(assoc.get(out_deg, v, 0))
+        assert got == want, (v, got, want)
+
+
+def test_top_k(graph):
+    g, a = graph
+    out_deg, _ = analytics.degrees(a)
+    ids, counts = analytics.top_k_vertices(out_deg, 3)
+    want = sorted(dict(g.degree).values(), reverse=True)[:3]
+    np.testing.assert_array_equal(np.sort(np.asarray(counts))[::-1], want)
+
+
+def test_triangle_count(graph):
+    g, a = graph
+    want = sum(nx.triangles(g).values()) / 3
+    got = float(analytics.triangle_count(a, cap_sq=4096, max_fanout=24))
+    assert got == want, (got, want)
+
+
+def test_common_neighbors_and_jaccard(graph):
+    g, a = graph
+    nodes = list(g.nodes)
+    for u, v in [(nodes[0], nodes[1]), (nodes[2], nodes[5])]:
+        nu, nv = set(g.neighbors(u)), set(g.neighbors(v))
+        want_cn = len(nu & nv)
+        got_cn = float(analytics.common_neighbors(a, u, v, cap=64))
+        assert got_cn == want_cn
+        want_j = want_cn / max(len(nu | nv), 1)
+        got_j = float(analytics.jaccard(a, u, v, cap=64))
+        assert abs(got_j - want_j) < 1e-6
+
+
+def test_reachability(graph):
+    g, a = graph
+    r2 = analytics.reachable_within(a, steps=2, cap=2048, max_fanout=24)
+    # spot-check: every 2-hop pair present with weight 1
+    paths = dict(nx.all_pairs_shortest_path_length(g, cutoff=2))
+    for u in list(g.nodes)[:6]:
+        for v in list(g.nodes)[:6]:
+            if u == v:
+                continue
+            want = 1.0 if paths.get(u, {}).get(v, 99) <= 2 else 0.0
+            got = float(assoc.get(r2, u, v))
+            assert got == want, (u, v, got, want)

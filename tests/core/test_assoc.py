@@ -1,0 +1,188 @@
+"""Unit + property tests for the associative-array algebra.
+
+The property tests check the paper's Section II guarantees — commutativity,
+associativity, distributivity, identities — which are exactly what licenses
+the hierarchical cascade and out-of-order parallel updates.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import assoc, semiring
+from repro.core.assoc import PAD
+
+SPACE = 16  # small key space to force collisions
+
+
+def dense(a, sr=semiring.PLUS_TIMES):
+    return np.asarray(assoc.to_dense(a, SPACE, SPACE, sr))
+
+
+def mk(rng_seed, n, cap=None, sr=semiring.PLUS_TIMES, space=SPACE):
+    rng = np.random.default_rng(rng_seed)
+    r = rng.integers(0, space, n)
+    c = rng.integers(0, space, n)
+    v = rng.normal(size=n).astype(np.float32)
+    a = assoc.from_triples(jnp.asarray(r), jnp.asarray(c), jnp.asarray(v), cap or 2 * n, sr)
+    ref = np.full((space, space), sr.zero, np.float32)
+    for i in range(n):
+        ref[r[i], c[i]] = sr.add(ref[r[i], c[i]], v[i])
+    return a, np.asarray(ref)
+
+
+def test_from_triples_combines_duplicates():
+    a, ref = mk(0, 64)
+    np.testing.assert_allclose(dense(a), ref, rtol=1e-5)
+    assert bool(assoc.is_sorted_unique(a))
+
+
+def test_from_triples_respects_valid_mask():
+    r = jnp.array([1, 2, 3], jnp.int32)
+    c = jnp.array([1, 2, 3], jnp.int32)
+    v = jnp.array([1.0, 2.0, 3.0])
+    a = assoc.from_triples(r, c, v, cap=4, valid=jnp.array([True, False, True]))
+    assert int(a.nnz) == 2
+    assert float(assoc.get(a, 2, 2)) == 0.0
+
+
+def test_add_matches_dense():
+    a, ra = mk(1, 40)
+    b, rb = mk(2, 40)
+    c = assoc.add(a, b, cap=128)
+    np.testing.assert_allclose(dense(c), ra + rb, rtol=1e-5)
+    assert bool(assoc.is_sorted_unique(c))
+
+
+def test_add_empty_is_identity():
+    a, ra = mk(3, 30)
+    z = assoc.empty(16)
+    c = assoc.add(a, z, cap=a.capacity + 16)
+    np.testing.assert_allclose(dense(c), ra, rtol=1e-6)
+
+
+def test_elem_mul_matches_dense():
+    a, ra = mk(4, 50)
+    b, rb = mk(5, 50)
+    c = assoc.elem_mul(a, b, cap=64)
+    np.testing.assert_allclose(dense(c), ra * rb, rtol=1e-5, atol=1e-6)
+
+
+def test_matmul_matches_dense():
+    a, ra = mk(6, 30)
+    b, rb = mk(7, 30)
+    c = assoc.matmul(a, b, cap=512, max_fanout=SPACE)
+    assert not bool(c.overflow)
+    np.testing.assert_allclose(dense(c), ra @ rb, rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_fanout_overflow_flag():
+    # B has a row with more entries than max_fanout -> flag must trip
+    r = jnp.zeros((8,), jnp.int32)
+    c = jnp.arange(8, dtype=jnp.int32)
+    v = jnp.ones((8,))
+    b = assoc.from_triples(r, c, v, cap=8)
+    a = assoc.from_triples(jnp.array([0], jnp.int32), jnp.array([0], jnp.int32), jnp.array([1.0]), cap=1)
+    out = assoc.matmul(a, b, cap=16, max_fanout=4)
+    assert bool(out.overflow)
+
+
+def test_transpose():
+    a, ra = mk(8, 40)
+    np.testing.assert_allclose(dense(assoc.transpose(a)), ra.T, rtol=1e-6)
+
+
+def test_matmul_transpose_identity():
+    # (AB)^T == B^T A^T  (paper Section II)
+    a, _ = mk(9, 25)
+    b, _ = mk(10, 25)
+    ab_t = assoc.transpose(assoc.matmul(a, b, cap=512, max_fanout=SPACE))
+    bt_at = assoc.matmul(
+        assoc.transpose(b), assoc.transpose(a), cap=512, max_fanout=SPACE
+    )
+    np.testing.assert_allclose(dense(ab_t), dense(bt_at), rtol=1e-4, atol=1e-5)
+
+
+def test_reduce_rows_degrees():
+    a, ra = mk(11, 40)
+    deg = assoc.reduce_rows(a)
+    want = ra.sum(axis=1)
+    got = np.asarray(assoc.to_dense(deg, SPACE, 1))[:, 0]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_get_and_extract_row():
+    a, ra = mk(12, 40)
+    for r in range(4):
+        row = assoc.extract_row(a, r, cap=SPACE)
+        np.testing.assert_allclose(dense(row)[r], ra[r], rtol=1e-6)
+        for c in range(4):
+            assert abs(float(assoc.get(a, r, c)) - ra[r, c]) < 1e-5
+
+
+def test_overflow_flag_on_capacity():
+    a, _ = mk(13, 64, cap=128)
+    b, _ = mk(14, 64, cap=128)
+    out = assoc.add(a, b, cap=4)  # deliberately too small
+    assert bool(out.overflow)
+    assert int(out.nnz) == 4
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    seed_a=st.integers(0, 1000),
+    seed_b=st.integers(0, 1000),
+    seed_c=st.integers(0, 1000),
+    srn=st.sampled_from(["plus.times", "max.plus", "min.plus", "max.min"]),
+)
+def test_property_add_commutative_associative(seed_a, seed_b, seed_c, srn):
+    sr = semiring.get(srn)
+    a, ra = mk(seed_a, 20, sr=sr)
+    b, rb = mk(seed_b + 2000, 20, sr=sr)
+    c, rc = mk(seed_c + 4000, 20, sr=sr)
+    ab = assoc.add(a, b, cap=128, sr=sr)
+    ba = assoc.add(b, a, cap=128, sr=sr)
+    np.testing.assert_allclose(dense(ab, sr), dense(ba, sr), rtol=1e-5)
+    ab_c = assoc.add(ab, c, cap=256, sr=sr)
+    a_bc = assoc.add(a, assoc.add(b, c, cap=128, sr=sr), cap=256, sr=sr)
+    np.testing.assert_allclose(dense(ab_c, sr), dense(a_bc, sr), rtol=1e-5)
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed_a=st.integers(0, 1000), seed_b=st.integers(0, 1000), seed_c=st.integers(0, 1000))
+def test_property_distributivity(seed_a, seed_b, seed_c):
+    # A (x) (B (+) C) == (A (x) B) (+) (A (x) C)
+    sr = semiring.PLUS_TIMES
+    a, _ = mk(seed_a, 25)
+    b, _ = mk(seed_b + 2000, 25)
+    c, _ = mk(seed_c + 4000, 25)
+    lhs = assoc.elem_mul(a, assoc.add(b, c, cap=128), cap=128)
+    rhs = assoc.add(
+        assoc.elem_mul(a, b, cap=64), assoc.elem_mul(a, c, cap=64), cap=128
+    )
+    np.testing.assert_allclose(dense(lhs), dense(rhs), rtol=1e-5, atol=1e-6)
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 200))
+def test_property_invariants_hold(seed, n):
+    a, _ = mk(seed, n, cap=2 * n)
+    assert bool(assoc.is_sorted_unique(a))
+
+
+def test_lex_searchsorted_matches_numpy():
+    rng = np.random.default_rng(0)
+    keys = np.sort(rng.integers(0, 50, 64).astype(np.int64) * 100 + rng.integers(0, 50, 64))
+    kr = (keys // 100).astype(np.int32)
+    kc = (keys % 100).astype(np.int32)
+    q = rng.integers(0, 5500, 128)
+    qr = (q // 100).astype(np.int32)
+    qc = (q % 100).astype(np.int32)
+    for side in ("left", "right"):
+        got = np.asarray(
+            assoc.lex_searchsorted(jnp.asarray(kr), jnp.asarray(kc), jnp.asarray(qr), jnp.asarray(qc), side)
+        )
+        want = np.searchsorted(keys, q, side=side)
+        np.testing.assert_array_equal(got, want)

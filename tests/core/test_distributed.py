@@ -1,0 +1,72 @@
+"""Distributed associative-array tests.
+
+Run under 1 device these degenerate gracefully; CI-style multi-device
+coverage comes from scripts that set XLA_FLAGS (see benchmarks/bench_scaling
+and the dry-run).  Here we test the pure bucketing/routing math plus the
+1-device paths of ParallelHierStream / ShardedAssoc.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import assoc, distributed, hierarchical
+from repro.core.assoc import PAD
+
+
+def test_owner_of_ranges():
+    rows = jnp.asarray([0, 31, 32, 255], jnp.int32)
+    own = np.asarray(distributed.owner_of(rows, n_shards=8, key_space=256))
+    np.testing.assert_array_equal(own, [0, 0, 1, 7])
+
+
+@pytest.mark.parametrize("fn", [distributed.bucket_by_owner, distributed.bucket_by_owner_sorted])
+def test_bucketing_partitions_exactly(fn):
+    rng = np.random.default_rng(0)
+    rows = jnp.asarray(rng.integers(0, 256, 64), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, 16, 64), jnp.int32)
+    vals = jnp.ones((64,))
+    br, bc, bv, dropped = fn(rows, cols, vals, 8, 256, 64)
+    assert int(dropped) == 0
+    got = []
+    for s in range(8):
+        live = np.asarray(br[s]) != PAD
+        for r, c in zip(np.asarray(br[s])[live], np.asarray(bc[s])[live]):
+            assert r // 32 == s  # every triple landed at its owner
+            got.append((r, c))
+    assert sorted(got) == sorted(zip(np.asarray(rows).tolist(), np.asarray(cols).tolist()))
+
+
+@pytest.mark.parametrize("fn", [distributed.bucket_by_owner, distributed.bucket_by_owner_sorted])
+def test_bucketing_overflow_counted(fn):
+    rows = jnp.zeros((16,), jnp.int32)  # all to owner 0
+    cols = jnp.arange(16, dtype=jnp.int32)
+    vals = jnp.ones((16,))
+    _, _, _, dropped = fn(rows, cols, vals, 4, 256, 8)
+    assert int(dropped) == 8
+
+
+def test_parallel_hier_stream_single_device():
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    ps = distributed.ParallelHierStream(mesh, (8,), top_capacity=512, batch_size=16)
+    h = ps.init_state()
+    r = jnp.arange(16, dtype=jnp.int32)[None]
+    c = jnp.zeros((1, 16), jnp.int32)
+    v = jnp.ones((1, 16))
+    h = ps.update(h, *ps.shard_stream(r, c, v))
+    assert int(ps.global_nnz(h)) == 16
+
+
+def test_sharded_assoc_single_device_roundtrip():
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    sa = distributed.ShardedAssoc(
+        mesh, "data", (8,), top_capacity=256, batch_size=16, key_space=64
+    )
+    hs = sa.init_state()
+    r = jnp.asarray([[5, 5, 9, 63] + [0] * 12], jnp.int32)
+    c = jnp.asarray([[1, 1, 2, 3] + [0] * 12], jnp.int32)
+    v = jnp.ones((1, 16))
+    hs, dropped = sa.update(hs, r, c, v)
+    assert int(dropped) == 0
+    assert float(sa.get(hs, jnp.asarray(5, jnp.int32), jnp.asarray(1, jnp.int32))) == 2.0
+    assert float(sa.get(hs, jnp.asarray(63, jnp.int32), jnp.asarray(3, jnp.int32))) == 1.0

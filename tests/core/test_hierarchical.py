@@ -1,0 +1,145 @@
+"""Tests for the hierarchical associative array (paper Section III)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import assoc, hierarchical, semiring, streaming
+
+SPACE = 64
+
+
+def _stream(seed, steps, batch, space=SPACE):
+    rng = np.random.default_rng(seed)
+    r = rng.integers(0, space, (steps, batch)).astype(np.int32)
+    c = rng.integers(0, space, (steps, batch)).astype(np.int32)
+    v = np.ones((steps, batch), np.float32)
+    return r, c, v
+
+
+def _dense_ref(r, c, v, space=SPACE):
+    ref = np.zeros((space, space), np.float32)
+    np.add.at(ref, (r.ravel(), c.ravel()), v.ravel())
+    return ref
+
+
+@pytest.mark.parametrize("cuts", [(), (32,), (16, 128), (8, 64, 512)])
+def test_hierarchy_equals_flat_ingest(cuts):
+    """The cascade must be semantically invisible: any number of cuts yields
+    the same array (the paper's linearity argument)."""
+    steps, batch = 12, 32
+    r, c, v = _stream(0, steps, batch)
+    h = hierarchical.init(cuts, top_capacity=SPACE * SPACE, batch_size=batch)
+    step = streaming.make_update_fn(cuts, donate=False)
+    for t in range(steps):
+        h = step(h, jnp.asarray(r[t]), jnp.asarray(c[t]), jnp.asarray(v[t]))
+    assert not bool(hierarchical.overflowed(h))
+    snap = hierarchical.snapshot(h, cap=2 * SPACE * SPACE)
+    np.testing.assert_allclose(
+        np.asarray(assoc.to_dense(snap, SPACE, SPACE)), _dense_ref(r, c, v)
+    )
+
+
+def test_cascades_happen_and_are_counted():
+    cuts = (8, 64)
+    r, c, v = _stream(1, 20, 16)
+    h = hierarchical.init(cuts, top_capacity=SPACE * SPACE, batch_size=16)
+    step = streaming.make_update_fn(cuts, donate=False)
+    for t in range(20):
+        h = step(h, jnp.asarray(r[t]), jnp.asarray(c[t]), jnp.asarray(v[t]))
+    cascades = np.asarray(h.cascades)
+    assert cascades[1] > 0, "layer-1 cut never fired"
+    assert cascades[2] > 0, "layer-2 cut never fired"
+
+
+def test_scan_ingest_matches_loop_ingest():
+    cuts = (16, 128)
+    steps, batch = 10, 32
+    r, c, v = _stream(2, steps, batch)
+    h0 = hierarchical.init(cuts, top_capacity=SPACE * SPACE, batch_size=batch)
+    h_loop = h0
+    step = streaming.make_update_fn(cuts, donate=False)
+    for t in range(steps):
+        h_loop = step(h_loop, jnp.asarray(r[t]), jnp.asarray(c[t]), jnp.asarray(v[t]))
+    h_scan, trace = streaming.ingest_stream(
+        h0, jnp.asarray(r), jnp.asarray(c), jnp.asarray(v), cuts
+    )
+    s_loop = hierarchical.snapshot(h_loop, cap=2 * SPACE * SPACE)
+    s_scan = hierarchical.snapshot(h_scan, cap=2 * SPACE * SPACE)
+    np.testing.assert_allclose(
+        np.asarray(assoc.to_dense(s_scan, SPACE, SPACE)),
+        np.asarray(assoc.to_dense(s_loop, SPACE, SPACE)),
+    )
+    assert trace.shape == (steps,)
+
+
+def test_geometric_cuts():
+    assert hierarchical.geometric_cuts(100, 10, 4) == (100, 1000, 10000)
+    assert hierarchical.geometric_cuts(4, 2, 2) == (4,)
+
+
+def test_bad_cuts_raise():
+    with pytest.raises(ValueError):
+        hierarchical.init((64, 32), top_capacity=1024, batch_size=8)
+
+
+def test_memory_bytes_tradeoff():
+    """Fig. 3: more/closer cuts -> more layer memory."""
+    h0 = hierarchical.init((), top_capacity=4096, batch_size=128)
+    h2 = hierarchical.init((256, 1024), top_capacity=4096, batch_size=128)
+    h4 = hierarchical.init((128, 256, 512, 1024), top_capacity=4096, batch_size=128)
+    assert (
+        hierarchical.memory_bytes(h0)
+        < hierarchical.memory_bytes(h2)
+        < hierarchical.memory_bytes(h4)
+    )
+
+
+@pytest.mark.parametrize(
+    "c1,ratio,n_layers", [(8, 2, 3), (16, 4, 3), (32, 8, 2), (8, 2, 4)]
+)
+def test_no_overflow_under_sizing_rule(c1, ratio, n_layers):
+    """The telescoping capacity rule must never overflow for any geometric
+    schedule — this is the static-shape safety argument from DESIGN.md.
+    (Seeds vary via hypothesis-free loop: config retraces dominate runtime.)"""
+    cuts = hierarchical.geometric_cuts(c1, ratio, n_layers)
+    batch = 16
+    steps = 15
+    step = streaming.make_update_fn(cuts, donate=False)
+    for seed in (0, 7):
+        r, c, v = _stream(seed, steps, batch)
+        h = hierarchical.init(cuts, top_capacity=SPACE * SPACE, batch_size=batch)
+        for t in range(steps):
+            h = step(h, jnp.asarray(r[t]), jnp.asarray(c[t]), jnp.asarray(v[t]))
+        assert not bool(hierarchical.overflowed(h))
+        snap = hierarchical.snapshot(h, cap=4 * SPACE * SPACE)
+        np.testing.assert_allclose(
+            np.asarray(assoc.to_dense(snap, SPACE, SPACE)), _dense_ref(r, c, v)
+        )
+
+
+@pytest.mark.parametrize("srn", ["plus.times", "max.plus", "count"])
+def test_semiring_generality(srn):
+    """The cascade only needs (+) associative+commutative — check a couple of
+    tropical semirings end-to-end."""
+    sr = semiring.get(srn)
+    cuts = (16,)
+    steps, batch = 8, 16
+    step = streaming.make_update_fn(cuts, sr=sr, donate=False)
+    for seed in (3, 11):
+        rng = np.random.default_rng(seed)
+        r = rng.integers(0, 16, (steps, batch)).astype(np.int32)
+        c = rng.integers(0, 16, (steps, batch)).astype(np.int32)
+        v = rng.normal(size=(steps, batch)).astype(np.float32)
+        h = hierarchical.init(cuts, top_capacity=1024, batch_size=batch, sr=sr)
+        ref = np.full((16, 16), sr.zero, np.float32)
+        for t in range(steps):
+            h = step(h, jnp.asarray(r[t]), jnp.asarray(c[t]), jnp.asarray(v[t]))
+            for i in range(batch):
+                ref[r[t, i], c[t, i]] = sr.add(ref[r[t, i], c[t, i]], v[t, i])
+        snap = hierarchical.snapshot(h, cap=2048, sr=sr)
+        np.testing.assert_allclose(
+            np.asarray(assoc.to_dense(snap, 16, 16, sr)), ref, rtol=1e-5
+        )

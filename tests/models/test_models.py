@@ -1,0 +1,229 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + cross-cutting model
+invariants: decode==forward consistency, flash==naive, chunked CE==full CE,
+mamba chunked-scan==recurrence."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, all_configs, get_config, reduced
+from repro.models import layers as L
+from repro.models import serving as SV
+from repro.models import transformer as TF
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, key, B=2, S=16):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    fe = None
+    if cfg.frontend == "vision":
+        fe = jax.random.normal(key, (B, cfg.frontend_tokens, cfg.d_model)) * 0.02
+    elif cfg.encoder_layers:
+        fe = jax.random.normal(key, (B, cfg.encoder_tokens, cfg.d_model)) * 0.02
+    return tokens, fe
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch, key):
+    """One forward + one train loss/grad step on the reduced config:
+    output shapes correct, loss finite, grads finite."""
+    cfg = reduced(get_config(arch))
+    params = TF.init_params(key, cfg)
+    B, S = 2, 16
+    tokens, fe = _inputs(cfg, key, B, S)
+    logits, hidden, aux = TF.forward(params, cfg, tokens, fe, ep_axis=None)
+    S_total = S + (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+    assert logits.shape == (B, S_total, cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits).all()), arch
+
+    loss, grads = jax.value_and_grad(
+        lambda p: TF.train_loss(p, cfg, tokens, tokens, frontend_embeds=fe, ep_axis=None)[0]
+    )(params)
+    assert np.isfinite(float(loss)), arch
+    for leaf in jax.tree.leaves(grads):
+        assert bool(jnp.isfinite(leaf).all()), arch
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["h2o_danube3_4b", "gemma3_27b", "deepseek_v3", "mamba2_1_3b", "jamba_1_5_large", "whisper_tiny"],
+)
+def test_decode_matches_forward(arch, key):
+    """Token-by-token decode through the static cache must reproduce the
+    full-sequence forward logits (exercises ring-buffer SWA caches, MLA
+    latent caches, SSM state, local:global patterns, enc-dec)."""
+    cfg = reduced(get_config(arch))
+    params = TF.init_params(key, cfg)
+    B, S = 2, 12
+    tokens, fe = _inputs(cfg, key, B, S)
+    logits_full, _, _ = TF.forward(params, cfg, tokens, fe, ep_axis=None, remat=False)
+    if cfg.frontend == "vision":
+        pytest.skip("vlm decode exercised via generate test")
+    cache = SV.init_cache(cfg, B, s_cap=S, dtype=jnp.float32)
+    if cfg.encoder_layers:
+        cache = SV.prefill_encoder(params, cfg, fe, cache)
+    step = jax.jit(functools.partial(SV.decode_step, cfg=cfg, ep_axis=None))
+    outs = []
+    for t in range(S):
+        lg, cache = step(params, cache=cache, token=tokens[:, t : t + 1])
+        outs.append(lg)
+    logits_dec = jnp.concatenate(outs, axis=1)
+    scale = float(jnp.max(jnp.abs(logits_full))) + 1e-9
+    per_pos = np.asarray(
+        jnp.max(jnp.abs(logits_full - logits_dec), axis=(0, 2))
+    ) / scale
+    # MoE archs: a borderline router top-k choice can flip under fp noise,
+    # diverging isolated positions (benign discreteness); require agreement
+    # at all but <=2 positions and everywhere else tight.
+    n_bad = int((per_pos > 5e-3).sum())
+    allowed = 2 if cfg.moe is not None else 0
+    assert n_bad <= allowed, (arch, per_pos.tolist())
+    assert float(np.median(per_pos)) < 5e-4, (arch, per_pos.tolist())
+
+
+def test_flash_matches_naive_attention(key):
+    import math
+
+    B, S, kvh, g, hd = 2, 64, 2, 3, 16
+    q = jax.random.normal(key, (B, S, kvh, g, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, kvh, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, kvh, hd))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    for causal, window, prefix in [(True, None, 0), (True, 7, 0), (True, None, 5)]:
+        o_f = L.flash_attention(
+            q, k, v, pos, pos, scale=1 / math.sqrt(hd),
+            causal=causal, window=window, prefix_len=prefix, q_chunk=16, k_chunk=8,
+        )
+        mask = L.attention_mask(pos, pos, causal=causal, window=window, prefix_len=prefix)
+        sc = jnp.einsum("bskgh,btkh->bkgst", q, k) / math.sqrt(hd)
+        sc = jnp.where(mask[:, None, None, :, :], sc, L.BIG_NEG)
+        o_n = jnp.einsum("bkgst,btkh->bskgh", jax.nn.softmax(sc, axis=-1), v)
+        np.testing.assert_allclose(np.asarray(o_f), np.asarray(o_n), atol=2e-5)
+
+
+def test_flash_gradients_match_naive(key):
+    import math
+
+    B, S, kvh, g, hd = 1, 32, 2, 2, 8
+    q = jax.random.normal(key, (B, S, kvh, g, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, kvh, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, kvh, hd))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+
+    def f_flash(q, k, v):
+        return L.flash_attention(
+            q, k, v, pos, pos, scale=1 / math.sqrt(hd), q_chunk=8, k_chunk=8
+        ).sum()
+
+    def f_naive(q, k, v):
+        mask = L.attention_mask(pos, pos)
+        sc = jnp.einsum("bskgh,btkh->bkgst", q, k) / math.sqrt(hd)
+        sc = jnp.where(mask[:, None, None, :, :], sc, L.BIG_NEG)
+        return jnp.einsum("bkgst,btkh->bskgh", jax.nn.softmax(sc, -1), v).sum()
+
+    g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_naive, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+def test_chunked_ce_matches_full(key):
+    cfg = reduced(get_config("qwen2_0_5b"))
+    params = TF.init_params(key, cfg)
+    tokens = jax.random.randint(key, (2, 32), 0, cfg.vocab)
+    labels = jax.random.randint(jax.random.fold_in(key, 3), (2, 32), 0, cfg.vocab)
+    logits, hidden, _ = TF.forward(params, cfg, tokens, None, ep_axis=None)
+    full, _ = TF.lm_loss(logits, labels)
+    ck, _ = TF.chunked_lm_loss(params, cfg, hidden, labels, chunk=8)
+    assert abs(float(full) - float(ck)) < 1e-4
+
+
+def test_mamba_chunked_equals_recurrence(key):
+    from repro.models import mamba as M
+
+    cfg = reduced(get_config("mamba2_1_3b"))
+    p = M.init_mamba(key, cfg)
+    B, S, d = 2, 24, cfg.d_model
+    x = jax.random.normal(jax.random.fold_in(key, 5), (B, S, d)) * 0.1
+    y_full, (state_full, tail_full) = M.apply_mamba(p, cfg, x)
+    # token-by-token recurrence
+    state = M.init_mamba_state(cfg, B, x.dtype)
+    ys = []
+    for t in range(S):
+        y_t, state = M.decode_step_mamba(p, cfg, x[:, t : t + 1], state)
+        ys.append(y_t)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_full), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(state[0]), np.asarray(state_full), atol=2e-3)
+
+
+def test_greedy_generate_runs(key):
+    cfg = reduced(get_config("qwen2_0_5b"))
+    params = TF.init_params(key, cfg)
+    prompt = jax.random.randint(key, (1, 4), 0, cfg.vocab)
+    out = SV.greedy_generate(params, cfg, prompt, steps=4, s_cap=16)
+    assert out.shape == (1, 4)
+    assert int(out.max()) < cfg.vocab
+
+
+def test_moe_routing_is_topk_weighted(key):
+    """MoE output must equal the explicit top-k weighted expert sum when
+    capacity is generous (no drops)."""
+    from repro.models import moe as MOE
+
+    cfg = reduced(get_config("phi3_5_moe"))
+    p = MOE.init_moe(key, cfg)
+    B, S = 2, 8
+    x = jax.random.normal(jax.random.fold_in(key, 7), (B, S, cfg.d_model)) * 0.1
+    out, aux = MOE.apply_moe(p, cfg, x, ep_axis=None)
+    assert int(aux["moe_dropped"]) == 0
+    # reference: dense loop over experts
+    m = cfg.moe
+    xt = x.reshape(-1, cfg.d_model)
+    logits = (xt @ p["router"]).astype(jnp.float32) * m.router_scale
+    gates = jax.nn.softmax(logits, -1)
+    _, idx = jax.lax.top_k(logits, m.top_k)
+    gsel = jnp.take_along_axis(gates, idx, 1)
+    gsel = gsel / gsel.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(xt)
+    for e in range(m.n_experts):
+        h = jax.nn.silu(xt @ p["wg"][e]) * (xt @ p["wu"][e])
+        eo = h @ p["wd"][e]
+        w = jnp.where(idx == e, gsel, 0.0).sum(-1, keepdims=True)
+        ref = ref + w.astype(xt.dtype) * eo
+    np.testing.assert_allclose(
+        np.asarray(out.reshape(-1, cfg.d_model)), np.asarray(ref), atol=2e-3
+    )
+
+
+def test_param_counts_match_published():
+    expect = {
+        "h2o_danube3_4b": (3.9e9, 4.1e9),
+        "gemma3_27b": (26.5e9, 28.5e9),
+        "qwen2_0_5b": (0.45e9, 0.55e9),
+        "granite_3_8b": (8.0e9, 8.8e9),
+        "jamba_1_5_large": (390e9, 405e9),
+        "phi3_5_moe": (41e9, 43e9),
+        "deepseek_v3": (665e9, 690e9),  # incl. MTP module
+        "paligemma_3b": (2.3e9, 2.7e9),  # text backbone + embeddings
+        "mamba2_1_3b": (1.2e9, 1.5e9),
+        "whisper_tiny": (0.03e9, 0.05e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_stage_plan_covers_all_layers():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        plan = TF.build_plan(cfg)
+        assert sum(s.n_layers for s in plan) == cfg.n_layers
+        # traced-block count stays bounded (compile-time guarantee)
+        assert sum(len(s.specs) for s in plan) <= 10, arch
