@@ -18,10 +18,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.reporting import BenchmarkReport
 from repro.sparse import row_accum as RA
 
 
-def run(v: int, d: int, t_tokens: int, micro: int, zipf: float = 1.2):
+def run(v: int, d: int, t_tokens: int, micro: int, zipf: float = 1.2,
+        report: BenchmarkReport | None = None):
     rng = np.random.default_rng(0)
     # zipf-ish token draw — the same power-law structure as R-MAT streams
     ranks = np.arange(1, v + 1, dtype=np.float64)
@@ -74,11 +76,29 @@ def run(v: int, d: int, t_tokens: int, micro: int, zipf: float = 1.2):
         f"hbm_bytes_dense={dense_bytes/1e9:.2f}GB,hbm_bytes_hier={hier_bytes/1e9:.3f}GB,"
         f"traffic_saving={dense_bytes/hier_bytes:.0f}x,distinct_ids={distinct}"
     )
+    if report is not None:
+        report.add(
+            "embed_grad",
+            params={"V": v, "d": d, "tokens_per_microbatch": t_tokens, "micro": micro},
+            updates_per_sec=t_tokens / (hier_us / 1e6),
+            wall_s=hier_us / 1e6 * micro,
+            dense_us=dense_us,
+            hier_us=hier_us,
+            hbm_bytes_dense=dense_bytes,
+            hbm_bytes_hier=hier_bytes,
+            traffic_saving=dense_bytes / hier_bytes,
+            distinct_ids=int(distinct),
+        )
 
 
-def main():
-    run(v=32_000, d=256, t_tokens=2048, micro=8)
-    run(v=262_144, d=256, t_tokens=2048, micro=8)
+def main(smoke: bool = False):
+    report = BenchmarkReport("embed_grad")
+    if smoke:
+        run(v=32_000, d=64, t_tokens=512, micro=4, report=report)
+    else:
+        run(v=32_000, d=256, t_tokens=2048, micro=8, report=report)
+        run(v=262_144, d=256, t_tokens=2048, micro=8, report=report)
+    report.write()
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ from typing import List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from benchmarks.reporting import BenchmarkReport
 from repro.core import hierarchical, streaming
 from repro.data import rmat
 
@@ -73,6 +74,7 @@ def cut_schedules(total_edges: int, group_size: int):
 
 
 def main(total_edges: int = 800_000, group_size: int = 5_000, scale: int = 18):
+    report = BenchmarkReport("hier_update")
     rows = []
     top = int(total_edges * 1.4)
     for name, cuts in cut_schedules(total_edges, group_size).items():
@@ -85,6 +87,20 @@ def main(total_edges: int = 800_000, group_size: int = 5_000, scale: int = 18):
             f"first_quarter={first:,.0f}/s,last_quarter={last:,.0f}/s,nnz={nnz}",
             flush=True,
         )
+        report.add(
+            name,
+            params={
+                "cuts": list(cuts),
+                "total_edges": total_edges,
+                "group_size": group_size,
+                "rmat_scale": scale,
+            },
+            updates_per_sec=cum,
+            wall_s=total_edges / cum,
+            first_quarter_rate=first,
+            last_quarter_rate=last,
+            nnz=int(nnz),
+        )
     # paper-shape assertions (soft, printed as verdicts)
     byname = {r[0]: r for r in rows}
     flat_cum = byname["0cut"][2]
@@ -93,6 +109,9 @@ def main(total_edges: int = 800_000, group_size: int = 5_000, scale: int = 18):
     v2 = byname["0cut"][3] > byname["0cut"][4]  # 0-cut rate decays
     print(f"verdict,hier_beats_flat,{v1},ratio={best_cum/flat_cum:.2f}x")
     print(f"verdict,flat_rate_decays,{v2}")
+    report.add("verdict_hier_beats_flat", passed=bool(v1), ratio=best_cum / flat_cum)
+    report.add("verdict_flat_rate_decays", passed=bool(v2))
+    report.write()
     return rows
 
 

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.reporting import BenchmarkReport
 from repro.core import assoc, semiring
 from repro.kernels.merge_add import ops as merge_ops
 from repro.kernels.scatter_add import ops as scatter_ops
@@ -33,7 +34,7 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6  # us
 
 
-def bench_merge(n: int):
+def bench_merge(n: int, report: BenchmarkReport | None = None):
     rng = np.random.default_rng(0)
     a = assoc.from_triples(
         jnp.asarray(rng.integers(0, 10 * n, n), jnp.int32),
@@ -57,9 +58,18 @@ def bench_merge(n: int):
         f"merge_add,n={n},ref_us={us_ref:.0f},interp_us={us_kern:.0f},"
         f"vmem_mb={vmem_mb:.2f},elems_per_byte_hbm={2*n*12/(2*n*12):.1f}"
     )
+    if report is not None:
+        report.add(
+            "merge_add",
+            params={"n": n},
+            updates_per_sec=2 * n / (us_ref / 1e6),
+            wall_s=us_ref / 1e6,
+            interp_us=us_kern,
+            vmem_mb=vmem_mb,
+        )
 
 
-def bench_sort(n: int):
+def bench_sort(n: int, report: BenchmarkReport | None = None):
     rng = np.random.default_rng(1)
     r = jnp.asarray(rng.integers(0, n, n), jnp.int32)
     c = jnp.asarray(rng.integers(0, n, n), jnp.int32)
@@ -67,9 +77,17 @@ def bench_sort(n: int):
     us_ref = _time(jax.jit(lambda *t: assoc.from_triples(*t, cap=n)), r, c, v)
     us_kern = _time(lambda *t: sort_ops.from_triples(*t, cap=n), r, c, v)
     print(f"sort_dedup,n={n},ref_us={us_ref:.0f},interp_us={us_kern:.0f}")
+    if report is not None:
+        report.add(
+            "sort_dedup",
+            params={"n": n},
+            updates_per_sec=n / (us_ref / 1e6),
+            wall_s=us_ref / 1e6,
+            interp_us=us_kern,
+        )
 
 
-def bench_scatter(v: int, d: int, k: int):
+def bench_scatter(v: int, d: int, k: int, report: BenchmarkReport | None = None):
     rng = np.random.default_rng(2)
     table = jnp.asarray(rng.normal(size=(v, d)), jnp.float32)
     ids = jnp.asarray(np.sort(rng.choice(v, k, replace=False)), jnp.int32)
@@ -83,15 +101,28 @@ def bench_scatter(v: int, d: int, k: int):
         f"scatter_add,V={v},d={d},k={k},sparse_us={us_ref:.0f},"
         f"dense_equiv_us={us_dense:.0f},bytes_ratio={v/k:.0f}x"
     )
+    if report is not None:
+        report.add(
+            "scatter_add",
+            params={"V": v, "d": d, "k": k},
+            wall_s=us_ref / 1e6,
+            dense_equiv_us=us_dense,
+            bytes_ratio=v / k,
+        )
 
 
-def main():
-    for n in (1 << 10, 1 << 14, 1 << 17):
-        bench_merge(n)
-    for n in (1 << 10, 1 << 14):
-        bench_sort(n)
-    bench_scatter(32_000, 512, 1024)
-    bench_scatter(262_144, 512, 4096)
+def main(smoke: bool = False):
+    report = BenchmarkReport("kernels")
+    merge_sizes = (1 << 10,) if smoke else (1 << 10, 1 << 14, 1 << 17)
+    sort_sizes = (1 << 10,) if smoke else (1 << 10, 1 << 14)
+    for n in merge_sizes:
+        bench_merge(n, report)
+    for n in sort_sizes:
+        bench_sort(n, report)
+    bench_scatter(32_000, 512, 1024, report)
+    if not smoke:
+        bench_scatter(262_144, 512, 4096, report)
+    report.write()
 
 
 if __name__ == "__main__":

@@ -5,19 +5,27 @@ hierarchical-array instances (one per core) each ingesting its own stream,
 with the aggregate rate = sum of instance rates — that independence is why
 it scales linearly to 1.9 B updates/s.
 
-This benchmark reproduces the *shape* on CPU: ``shard_map`` over N host
-devices (one instance per device, zero update-path collectives — identical
-program structure to the TPU deployment), measuring aggregate rate at
-N = 1, 2, 4, 8.  The 512-device multi-pod dry-run proves the same program
-lowers at pod scale; the linear model fitted here, projected to the paper's
-34,000 instances, is reported alongside (that projection is exactly the
-paper's own argument, and our measured scaling efficiency quantifies how
-safe it is).
+Two instance axes are measured here:
+
+* **D — devices** (``shard_map``, one instance per device): the seed's
+  original sweep, N = 1, 2, 4, 8 host devices.  Identical program structure
+  to the TPU deployment; the 512-device dry-run proves the same program
+  lowers at pod scale.
+* **K — packed instances per device** (``vmap``, new): the
+  :class:`~repro.core.multistream.MultiStreamEngine` stacks K independent
+  hierarchies per device and updates them in one fused branchless-cascade
+  program, giving K x D total instances on a single host — the paper's
+  instance-scaling curve without needing 34,000 cores.  Aggregate rate
+  rises with K as per-dispatch overhead amortizes across the pack.
+
+Besides the CSV lines, results are written to ``BENCH_scaling.json``
+(see ``benchmarks/reporting.py``) so CI can archive the rate trajectory.
 
 NOTE: run as a standalone script — it forces 8 host devices at import.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 
@@ -30,93 +38,240 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distributed, hierarchical
+from benchmarks.reporting import BenchmarkReport
+from repro.core import distributed, hierarchical, multistream
 from repro.data import rmat
 
 
-def run_parallel(n_dev: int, groups: int = 20, group_size: int = 10_000, scale: int = 18):
-    """Aggregate updates/s with n_dev independent instances."""
+def _mesh(n_dev: int):
     devs = jax.devices()[:n_dev]
-    mesh = jax.sharding.Mesh(np.asarray(devs).reshape(n_dev), ("data",))
-    cuts = (2 * group_size, 16 * group_size)
-    ps = distributed.ParallelHierStream(
-        mesh, cuts, top_capacity=groups * group_size * 2, batch_size=group_size
+    return jax.sharding.Mesh(np.asarray(devs).reshape(n_dev), ("data",))
+
+
+def run_packed(
+    k_per_device: int,
+    n_dev: int,
+    groups: int = 20,
+    group_size: int = 32,
+    scale: int = 16,
+    cuts=None,
+    top_capacity: int | None = None,
+    branchless: bool | None = True,
+):
+    """Aggregate updates/s with k_per_device x n_dev packed instances.
+
+    The small default per-instance group keeps even K = 256 in the
+    dispatch-amortization regime on a single shared CPU, so the measured
+    K-curve reflects instance packing rather than compute saturation.
+    ``branchless=True`` (default) makes every K point — including K = 1 —
+    run the identical masked-cascade per-instance program, so the sweep
+    isolates packing; pass ``None`` for the engine's auto (cond at K = 1)
+    behavior.  Returns ``(aggregate_rate, wall_s, n_instances)``.
+    """
+    mesh = _mesh(n_dev)
+    cuts = cuts if cuts is not None else (group_size, 4 * group_size)
+    top = top_capacity if top_capacity is not None else int(groups * group_size * 1.25)
+    eng = multistream.MultiStreamEngine(
+        mesh,
+        cuts,
+        top_capacity=top,
+        batch_size=group_size,
+        instances_per_device=k_per_device,
+        branchless=branchless,
     )
-    h = ps.init_state()
+    n_inst = eng.n_instances
+    h = eng.init_state()
     # pre-generate the whole stream (host) so timing is pure update cost
     key = jax.random.PRNGKey(0)
     batches = []
-    for g in range(groups):
+    for _ in range(groups):
         key, sub = jax.random.split(key)
-        keys = jax.random.split(sub, n_dev)
+        keys = jax.random.split(sub, n_inst)
         s, d = jax.vmap(lambda k: rmat.rmat_edges(k, group_size, scale))(keys)
-        batches.append(ps.shard_stream(s, d, jnp.ones((n_dev, group_size))))
-    # warmup
-    h = ps.update(h, *batches[0])
+        batches.append(eng.shard_stream(s, d, jnp.ones((n_inst, group_size))))
+    # warmup/compile (excluded from timing)
+    h = eng.update(h, *batches[0])
     jax.block_until_ready(h)
-    h = ps.init_state()
+    h = eng.init_state()
     t0 = time.perf_counter()
     for b in batches:
-        h = ps.update(h, *b)
+        h = eng.update(h, *b)
     jax.block_until_ready(h)
     dt = time.perf_counter() - t0
-    total_updates = n_dev * groups * group_size
-    return total_updates / dt
+    total_updates = n_inst * groups * group_size
+    return total_updates / dt, dt, n_inst
 
 
-def update_path_collectives(n_dev: int = None) -> dict:
-    """Compile the multi-instance update and count collectives in its HLO.
+def run_parallel(n_dev: int, groups: int = 20, group_size: int = 10_000, scale: int = 18):
+    """Aggregate updates/s with n_dev one-per-device instances (K = 1).
+
+    Keeps the seed sweep's exact configuration (cut schedule, top layer,
+    and the lax.cond cascade program) so the archived device-axis
+    trajectory stays comparable across commits.
+    """
+    rate, dt, _ = run_packed(
+        1,
+        n_dev,
+        groups=groups,
+        group_size=group_size,
+        scale=scale,
+        cuts=(2 * group_size, 16 * group_size),
+        top_capacity=groups * group_size * 2,
+        branchless=None,
+    )
+    return rate
+
+
+def update_path_collectives(n_dev: int = None, k_per_device: int = 4) -> dict:
+    """Compile the packed multi-instance update and count collectives in HLO.
 
     The paper's linear-scaling argument is structural: instances are
     independent, so the update path must contain ZERO cross-device
-    collectives — we verify that property on the compiled program (the same
-    check holds at 512 devices in the dry-run).  On this container all
-    'devices' share one CPU, so wall-clock aggregate rates CANNOT show
-    scaling; the structural check is the honest evidence.
+    collectives — we verify that property on the compiled program, now with
+    K packed instances per device (the same check holds at 512 devices in
+    the dry-run).  On this container all 'devices' share one CPU, so
+    wall-clock aggregate rates CANNOT show device scaling; the structural
+    check is the honest evidence.
     """
     import re
 
     n_dev = n_dev or len(jax.devices())
-    devs = jax.devices()[:n_dev]
-    mesh = jax.sharding.Mesh(np.asarray(devs).reshape(n_dev), ("data",))
-    ps = distributed.ParallelHierStream(mesh, (64,), top_capacity=4096, batch_size=32)
-    h = ps.init_state()
-    r = jnp.zeros((n_dev, 32), jnp.int32)
-    c = jnp.zeros((n_dev, 32), jnp.int32)
-    v = jnp.ones((n_dev, 32))
-    txt = ps.update.lower(h, *ps.shard_stream(r, c, v)).compile().as_text()
+    mesh = _mesh(n_dev)
+    eng = multistream.MultiStreamEngine(
+        mesh, (64,), top_capacity=4096, batch_size=32,
+        instances_per_device=k_per_device,
+    )
+    h = eng.init_state()
+    n = eng.n_instances
+    r = jnp.zeros((n, 32), jnp.int32)
+    c = jnp.zeros((n, 32), jnp.int32)
+    v = jnp.ones((n, 32))
+    txt = eng.update.lower(h, *eng.shard_stream(r, c, v)).compile().as_text()
     out = {}
     for k in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute"):
         out[k] = len(re.findall(rf"= [\w\[\],{{}}]+ {k}[(-]", txt))
     return out
 
 
-def main():
-    rates = {}
+def main(
+    k_values=(1, 8, 64, 256),
+    groups: int = 20,
+    group_size: int = 32,
+    scale: int = 16,
+    device_sweep: bool = True,
+):
+    report = BenchmarkReport("scaling")
     max_dev = len(jax.devices())
-    ns = [n for n in (1, 2, 4, 8) if n <= max_dev]
-    for n in ns:
-        r = run_parallel(n)
-        rates[n] = r
-        print(
-            f"scaling,n_instances={n},aggregate_rate={r:,.0f}/s,"
-            f"per_instance={r/n:,.0f}/s", flush=True,
+
+    # -- D axis: one instance per device (the seed's sweep) ------------------
+    if device_sweep:
+        for n in [n for n in (1, 2, 4, 8) if n <= max_dev]:
+            r = run_parallel(n)
+            print(
+                f"scaling,device_axis,n_instances={n},aggregate_rate={r:,.0f}/s,"
+                f"per_instance={r/n:,.0f}/s", flush=True,
+            )
+            report.add(
+                "device_scaling",
+                params={"n_devices": n, "k_per_device": 1, "n_instances": n},
+                updates_per_sec=r,
+                per_instance_rate=r / n,
+            )
+
+    # -- K axis: packed instances per device (paper Fig. 6 shape) ------------
+    k_rates = {}
+    for k in k_values:
+        rate, wall, n_inst = run_packed(
+            k, max_dev, groups=groups, group_size=group_size, scale=scale
         )
-    colls = update_path_collectives()
+        k_rates[k] = rate
+        print(
+            f"scaling,instance_axis,k_per_device={k},n_instances={n_inst},"
+            f"aggregate_rate={rate:,.0f}/s,per_instance={rate/n_inst:,.0f}/s,"
+            f"wall_s={wall:.3f}", flush=True,
+        )
+        report.add(
+            "packed_scaling",
+            params={
+                "k_per_device": k,
+                "n_devices": max_dev,
+                "n_instances": n_inst,
+                "groups": groups,
+                "group_size": group_size,
+                "rmat_scale": scale,
+            },
+            updates_per_sec=rate,
+            wall_s=wall,
+            per_instance_rate=rate / n_inst,
+        )
+    # On real hardware each instance has its own core and the curve is linear
+    # (the paper's Fig. 6).  On this container every simulated device shares
+    # one physical CPU, so the honest expectation is: aggregate rate RISES
+    # with K until the CPU saturates, then flattens/dips.  The verdict checks
+    # the rise (strictly increasing up to the best-K point, which must not be
+    # the first sweep point); the saturation K is reported alongside.
+    ks = sorted(k_rates)
+    best_k = max(k_rates, key=k_rates.get)
+    rising = [k for k in ks if k <= best_k]
+    monotone_rise = len(rising) > 1 and all(
+        k_rates[a] < k_rates[b] for a, b in zip(rising, rising[1:])
+    )
+    print(
+        f"verdict,aggregate_rate_increases_with_k,{monotone_rise},"
+        f"saturation_k={best_k},rates={k_rates}"
+    )
+    report.add(
+        "verdict_rate_increases_with_k",
+        params={"k_values": ks},
+        passed=bool(monotone_rise),
+        saturation_k=int(best_k),
+        rates={str(k): k_rates[k] for k in ks},
+    )
+
+    # -- structural evidence: zero update-path collectives -------------------
+    coll_k = 4
+    colls = update_path_collectives(k_per_device=coll_k)
     total = sum(colls.values())
     print(f"verdict,update_path_collective_free,{total == 0},ops={colls}")
+    report.add(
+        "update_path_collectives",
+        params={"k_per_device": coll_k, "n_devices": max_dev},
+        passed=bool(total == 0),
+        **colls,
+    )
     print(
         "note,aggregate rates on this container share ONE physical CPU across "
         "simulated devices - scaling evidence is the collective-free update "
         "program (above) + the 512-chip dry-run lowering (EXPERIMENTS.md)"
     )
-    per_inst = rates[ns[0]]
+    per_inst = k_rates[best_k] / (best_k * max_dev)
+    proj = per_inst * 34_000
     print(
-        f"projection,34000_instances,{per_inst * 34_000:,.0f}/s at this "
-        f"container's single-instance rate,(paper: 1.9e9/s on 34,000 Xeon cores)"
+        f"projection,34000_instances,{proj:,.0f}/s at this container's "
+        f"per-instance rate,(paper: 1.9e9/s on 34,000 Xeon cores)"
     )
-    return rates
+    report.add(
+        "projection_34000_instances",
+        params={"basis_k": best_k, "basis_devices": max_dev},
+        updates_per_sec=proj,
+    )
+    report.write()
+    return k_rates
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--k", type=int, nargs="+", default=[1, 8, 64, 256],
+                    help="instances-per-device sweep points")
+    ap.add_argument("--groups", type=int, default=20)
+    ap.add_argument("--group-size", type=int, default=32)
+    ap.add_argument("--scale", type=int, default=16)
+    ap.add_argument("--no-device-sweep", action="store_true")
+    args = ap.parse_args()
+    main(
+        k_values=tuple(args.k),
+        groups=args.groups,
+        group_size=args.group_size,
+        scale=args.scale,
+        device_sweep=not args.no_device_sweep,
+    )

@@ -1,16 +1,20 @@
 """Benchmark orchestrator — one section per paper table/figure.
 
-Prints ``name,...`` CSV lines; sections:
+Prints ``name,...`` CSV lines AND writes ``BENCH_<section>.json`` structured
+results (schema: ``benchmarks/reporting.py``) to ``--json-dir``; sections:
   hier_update   — paper Figs. 4/5 (update rate vs cuts, instantaneous decay)
-  scaling       — paper Fig. 6 shape (aggregate rate vs instances; run
-                  standalone with XLA_FLAGS=--xla_force_host_platform_device_count=8
-                  for the multi-instance points; in-process fallback = 1 instance)
+  scaling       — paper Fig. 6 shape: aggregate rate vs instances, on two
+                  axes — D devices (run standalone or with
+                  XLA_FLAGS=--xla_force_host_platform_device_count=8) and
+                  K vmap-packed instances per device (K ∈ {1, 8, 64, 256})
   kernels       — Pallas kernel ref/interp microbenches + TPU design stats
   embed_grad    — LM integration: hierarchical sparse embedding-grad traffic
 
-Scale: laptop-size defaults (--full restores paper-scale streams).
+Scale: laptop-size defaults (--full restores paper-scale streams; --smoke
+shrinks everything for CI).
 """
 import argparse
+import os
 import sys
 
 
@@ -19,23 +23,34 @@ def main() -> None:
     ap.add_argument("--section", default="all",
                     choices=["all", "hier", "kernels", "embed", "scaling"])
     ap.add_argument("--full", action="store_true", help="paper-scale streams")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-size streams (fast, still exercises every path)")
+    ap.add_argument("--json-dir", default=None,
+                    help="directory for BENCH_<section>.json (default: cwd)")
     args = ap.parse_args()
+    if args.json_dir:
+        os.environ["BENCH_JSON_DIR"] = args.json_dir
 
     if args.section in ("all", "hier"):
         from benchmarks import bench_hier_update
         if args.full:
             bench_hier_update.main(total_edges=100_000_000, group_size=100_000, scale=26)
+        elif args.smoke:
+            bench_hier_update.main(total_edges=80_000, group_size=2_000, scale=14)
         else:
             bench_hier_update.main()
     if args.section in ("all", "kernels"):
         from benchmarks import bench_kernels
-        bench_kernels.main()
+        bench_kernels.main(smoke=args.smoke)
     if args.section in ("all", "embed"):
         from benchmarks import bench_embed_grad
-        bench_embed_grad.main()
+        bench_embed_grad.main(smoke=args.smoke)
     if args.section in ("all", "scaling"):
         from benchmarks import bench_scaling
-        bench_scaling.main()
+        if args.smoke:
+            bench_scaling.main(k_values=(1, 8), groups=5, device_sweep=False)
+        else:
+            bench_scaling.main()
 
 
 if __name__ == "__main__":

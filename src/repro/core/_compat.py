@@ -1,0 +1,34 @@
+"""JAX version compatibility shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``,
+and its replication-check kwarg was renamed ``check_rep`` -> ``check_vma``
+(independently of the move: jax 0.6.x exposes the public API with the old
+kwarg).  We detect both the location and the kwarg name so the engine runs
+on the pinned 0.4.x toolchain and on newer jax alike.  Replication checking
+is disabled in all cases: the streaming state is deliberately *not*
+replicated (one independent instance per shard), which is exactly what the
+checker is designed to flag.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+_shard_map_impl = getattr(jax, "shard_map", None)
+if _shard_map_impl is None:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_params = inspect.signature(_shard_map_impl).parameters
+if "check_vma" in _params:
+    _check_kwargs = {"check_vma": False}
+elif "check_rep" in _params:
+    _check_kwargs = {"check_rep": False}
+else:  # future jax with the check removed entirely
+    _check_kwargs = {}
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    return _shard_map_impl(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **_check_kwargs
+    )

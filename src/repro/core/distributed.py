@@ -17,7 +17,6 @@ Two designs, mirroring the paper and going one step beyond it:
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Sequence, Tuple
 
@@ -26,9 +25,11 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from . import assoc, hierarchical, streaming
+from . import assoc, hierarchical, multistream
+from ._compat import shard_map
 from .assoc import Assoc, PAD
 from .hierarchical import HierAssoc
+from .multistream import MultiStreamEngine
 from .semiring import PLUS_TIMES, Semiring
 
 
@@ -37,7 +38,14 @@ from .semiring import PLUS_TIMES, Semiring
 # ---------------------------------------------------------------------------
 
 class ParallelHierStream:
-    """One independent hierarchical array per device (paper Section V)."""
+    """One independent hierarchical array per device (paper Section V).
+
+    A thin facade over :class:`~repro.core.multistream.MultiStreamEngine`
+    with ``instances_per_device=1`` — the paper-faithful one-instance-per-
+    device reading.  Pass ``instances_per_device=K`` to pack K vmapped
+    instances onto every device (K x D total), which is how the paper's
+    34,000-instance axis is exercised on a single host.
+    """
 
     def __init__(
         self,
@@ -47,75 +55,38 @@ class ParallelHierStream:
         batch_size: int,
         sr: Semiring = PLUS_TIMES,
         axis_names: Tuple[str, ...] | None = None,
+        instances_per_device: int = 1,
     ):
+        self.engine = MultiStreamEngine(
+            mesh,
+            cuts,
+            top_capacity,
+            batch_size,
+            instances_per_device=instances_per_device,
+            sr=sr,
+            axis_names=axis_names,
+        )
         self.mesh = mesh
-        self.cuts = tuple(int(c) for c in cuts)
+        self.cuts = self.engine.cuts
         self.sr = sr
         self.batch_size = batch_size
-        self.axes = tuple(axis_names or mesh.axis_names)
-        self.n_instances = 1
-        for a in self.axes:
-            self.n_instances *= mesh.shape[a]
-        self._top_capacity = top_capacity
-
-        def _init():
-            return hierarchical.init(self.cuts, top_capacity, batch_size, sr)
-
-        # replicate the *program*, not the data: each device materializes its
-        # own empty hierarchy, sharded on the leading (instance) axis.
-        def init_all():
-            h = _init()
-            return jax.tree.map(lambda x: jnp.broadcast_to(x, (1,) + x.shape), h)
-
-        self._init_all = init_all
-        spec = P(self.axes)
-        self._state_spec = spec
-
-        @functools.partial(
-            jax.shard_map,
-            mesh=mesh,
-            in_specs=(spec, spec, spec, spec),
-            out_specs=spec,
-            check_vma=False,
-        )
-        def _update(h, rows, cols, vals):
-            h = jax.tree.map(lambda x: x[0], h)  # drop instance dim
-            h = hierarchical.update_triples(
-                h, rows[0], cols[0], vals[0], self.cuts, self.sr
-            )
-            return jax.tree.map(lambda x: x[None], h)
-
-        self.update = jax.jit(_update, donate_argnums=(0,))
-
-        @functools.partial(
-            jax.shard_map,
-            mesh=mesh,
-            in_specs=(spec,),
-            out_specs=P(),
-            check_vma=False,
-        )
-        def _global_nnz(h):
-            local = hierarchical.nnz_total(jax.tree.map(lambda x: x[0], h))
-            for ax in self.axes:
-                local = lax.psum(local, ax)
-            return local
-
-        self.global_nnz = jax.jit(_global_nnz)
+        self.axes = self.engine.axes
+        self.n_instances = self.engine.n_instances
+        # jitted engine entry points, donated state, zero update collectives
+        self.update = self.engine.update
+        self.global_nnz = self.engine.global_nnz
 
     def init_state(self) -> HierAssoc:
         """Per-device hierarchies, stacked on a leading instance axis."""
-        n = self.n_instances
-        h = self._init_all()
-        h = jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape[1:]), h)
-        sharding = NamedSharding(self.mesh, self._state_spec)
-        return jax.tree.map(
-            lambda x: jax.device_put(x, NamedSharding(self.mesh, P(self.axes))), h
-        )
+        return self.engine.init_state()
 
     def shard_stream(self, rows, cols, vals):
         """Place a [n_instances, B] triple batch with instance-major sharding."""
-        sh = NamedSharding(self.mesh, P(self.axes))
-        return tuple(jax.device_put(x, sh) for x in (rows, cols, vals))
+        return self.engine.shard_stream(rows, cols, vals)
+
+    def ingest(self, h: HierAssoc, rows, cols, vals):
+        """Hash-route a flat global triple batch to every instance and update."""
+        return self.engine.ingest(h, rows, cols, vals)
 
 
 # ---------------------------------------------------------------------------
@@ -174,34 +145,17 @@ def bucket_by_owner_sorted(
     sr: Semiring = PLUS_TIMES,
 ):
     """O(B log B) bucketing via sort (production path; the quadratic-rank
-    variant above is kept as the readable reference for tests)."""
+    variant above is kept as the readable reference for tests).
+
+    The sort-scatter core is shared with the hash router
+    (:func:`multistream.scatter_to_slots`); only the ownership function
+    differs — contiguous key ranges here, key hashing there.
+    """
     owner = owner_of(rows, n_shards, key_space)
     live = rows != PAD
-    owner = jnp.where(live, owner, n_shards)
-    order = jnp.argsort(owner, stable=True)
-    owner_s = owner[order]
-    # rank within run of equal owners
-    idx = jnp.arange(rows.shape[0], dtype=jnp.int32)
-    start = jnp.searchsorted(owner_s, owner_s, side="left").astype(jnp.int32)
-    rank = idx - start
-    live_s = live[order]
-    dropped = jnp.sum((rank >= slot_cap) & live_s)
-    slot = jnp.where(
-        (rank < slot_cap) & live_s, owner_s * slot_cap + rank, n_shards * slot_cap
+    return multistream.scatter_to_slots(
+        owner, live, rows, cols, vals, n_shards, slot_cap, sr
     )
-    out_r = jnp.full((n_shards * slot_cap,), PAD, jnp.int32).at[slot].set(
-        rows[order], mode="drop"
-    )
-    out_c = jnp.full((n_shards * slot_cap,), PAD, jnp.int32).at[slot].set(
-        cols[order], mode="drop"
-    )
-    out_v = (
-        jnp.full((n_shards * slot_cap,), sr.zero, vals.dtype)
-        .at[slot]
-        .set(vals[order], mode="drop")
-    )
-    shape = (n_shards, slot_cap)
-    return out_r.reshape(shape), out_c.reshape(shape), out_v.reshape(shape), dropped
 
 
 class ShardedAssoc:
@@ -240,11 +194,10 @@ class ShardedAssoc:
         spec_batch = P(axis)
 
         @functools.partial(
-            jax.shard_map,
+            shard_map,
             mesh=mesh,
             in_specs=(spec_state, spec_batch, spec_batch, spec_batch),
             out_specs=(spec_state, P()),
-            check_vma=False,
         )
         def _update(h, rows, cols, vals):
             h = jax.tree.map(lambda x: x[0], h)
@@ -268,11 +221,10 @@ class ShardedAssoc:
         self.update = jax.jit(_update, donate_argnums=(0,))
 
         @functools.partial(
-            jax.shard_map,
+            shard_map,
             mesh=mesh,
             in_specs=(spec_state, P(), P()),
             out_specs=P(),
-            check_vma=False,
         )
         def _get(h, r, c):
             h = jax.tree.map(lambda x: x[0], h)

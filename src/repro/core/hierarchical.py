@@ -88,15 +88,30 @@ def init(
     )
 
 
+def _select_assoc(pred: jax.Array, a: Assoc, b: Assoc) -> Assoc:
+    """Per-leaf ``where(pred, a, b)`` — the branchless analogue of
+    ``lax.cond`` for whole associative arrays.  ``pred`` may be a traced
+    scalar (e.g. a per-instance predicate under ``vmap``)."""
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
 def update(
     h: HierAssoc,
     batch: Assoc,
     cuts: Sequence[int],
     sr: Semiring = PLUS_TIMES,
+    *,
+    branchless: bool = False,
 ) -> HierAssoc:
     """One streaming update: ``A_1 += batch`` then cascade (paper's HierAdd).
 
     ``cuts`` must be the same (static) schedule used at :func:`init`.
+
+    ``branchless=True`` replaces each ``lax.cond`` with an unconditional
+    cascade merge selected by ``jnp.where`` — both sides are always computed,
+    but the program contains no control flow, so it vectorizes cleanly under
+    ``jax.vmap`` (the instance-packed engine in :mod:`.multistream`), with each
+    vmap lane cascading independently of its neighbours.
     """
     cuts = tuple(int(c) for c in cuts)
     layers = list(h.layers)
@@ -114,7 +129,12 @@ def update(
         def no_cascade(src=src, dst=dst):
             return dst, src
 
-        merged, cleared = lax.cond(pred, do_cascade, no_cascade)
+        if branchless:
+            merged_c, cleared_c = do_cascade()
+            merged = _select_assoc(pred, merged_c, dst)
+            cleared = _select_assoc(pred, cleared_c, src)
+        else:
+            merged, cleared = lax.cond(pred, do_cascade, no_cascade)
         layers[i + 1] = merged
         layers[i] = cleared
         cascades = cascades.at[i + 1].add(pred.astype(jnp.int32))
@@ -129,10 +149,12 @@ def update_triples(
     cuts: Sequence[int],
     sr: Semiring = PLUS_TIMES,
     valid: jax.Array | None = None,
+    *,
+    branchless: bool = False,
 ) -> HierAssoc:
     """Ingest a raw triple batch (sorts/combines it, then :func:`update`)."""
     batch = assoc.from_triples(rows, cols, vals, cap=rows.shape[0], sr=sr, valid=valid)
-    return update(h, batch, cuts, sr)
+    return update(h, batch, cuts, sr, branchless=branchless)
 
 
 def snapshot(h: HierAssoc, cap: int, sr: Semiring = PLUS_TIMES) -> Assoc:

@@ -8,6 +8,12 @@ Two ingestion paths:
 * :func:`ingest_stream` — a ``lax.scan`` over a whole stream held on device,
   used by tests and by the scaling experiment where per-group host timing
   would serialize devices.
+
+Both grow an ``instances=K`` path: pass a packed hierarchy (leaves with a
+leading ``[K]`` instance axis, see :mod:`.multistream`) and a ``[K, B]``
+(or ``[T, K, B]`` for the scan) triple stream, and every batch updates all K
+independent instances in one fused vmapped program — the paper's
+instance-scaling axis on a single device.
 """
 from __future__ import annotations
 
@@ -18,44 +24,84 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from . import assoc, hierarchical
+from . import assoc, hierarchical, multistream
 from .hierarchical import HierAssoc
 from .semiring import PLUS_TIMES, Semiring
 
 
-def make_update_fn(cuts: Sequence[int], sr: Semiring = PLUS_TIMES, donate: bool = True):
+def make_update_fn(
+    cuts: Sequence[int],
+    sr: Semiring = PLUS_TIMES,
+    donate: bool = True,
+    instances: int | None = None,
+):
     """A jitted ``(h, rows, cols, vals) -> h`` single-batch update.
 
     The hierarchy argument is donated so layer buffers are updated in place —
-    on TPU this is what keeps layer 1 resident in fast memory.
+    on TPU this is what keeps layer 1 resident in fast memory; donation is
+    just as load-bearing for the packed path, whose stacked buffers are K
+    times larger.
+
+    With ``instances=K`` the returned function updates a packed K-instance
+    hierarchy from ``[K, B]`` triple batches (each instance cascades
+    independently via the branchless masked cascade).
     """
     cuts = tuple(int(c) for c in cuts)
 
-    def step(h: HierAssoc, rows, cols, vals) -> HierAssoc:
-        return hierarchical.update_triples(h, rows, cols, vals, cuts, sr)
+    if instances is None:
+
+        def step(h: HierAssoc, rows, cols, vals) -> HierAssoc:
+            return hierarchical.update_triples(h, rows, cols, vals, cuts, sr)
+
+    else:
+        k = int(instances)
+
+        def step(h: HierAssoc, rows, cols, vals) -> HierAssoc:
+            if rows.shape[0] != k:
+                raise ValueError(
+                    f"expected [{k}, B] instance-major triples, got {rows.shape}"
+                )
+            return multistream.packed_update(h, rows, cols, vals, cuts, sr)
 
     return jax.jit(step, donate_argnums=(0,) if donate else ())
 
 
 def ingest_stream(
     h: HierAssoc,
-    rows: jax.Array,  # [T, B] int32
-    cols: jax.Array,  # [T, B]
-    vals: jax.Array,  # [T, B]
+    rows: jax.Array,  # [T, B] int32, or [T, K, B] when instances=K
+    cols: jax.Array,
+    vals: jax.Array,
     cuts: Sequence[int],
     sr: Semiring = PLUS_TIMES,
+    instances: int | None = None,
 ) -> Tuple[HierAssoc, jax.Array]:
-    """Scan a [T, B] stream of triple batches into the hierarchy.
+    """Scan a stream of triple batches into the hierarchy.
 
     Returns the final hierarchy and the per-step total-nnz trace (telemetry
-    mirroring the paper's nnz-vs-updates plot, Fig. 3).
+    mirroring the paper's nnz-vs-updates plot, Fig. 3).  With ``instances=K``
+    the stream is ``[T, K, B]``, ``h`` is a packed K-instance hierarchy, and
+    the trace is the per-step *per-instance* nnz, shape ``[T, K]``.
     """
     cuts = tuple(int(c) for c in cuts)
 
-    def body(carry: HierAssoc, batch):
-        r, c, v = batch
-        nxt = hierarchical.update_triples(carry, r, c, v, cuts, sr)
-        return nxt, hierarchical.nnz_total(nxt)
+    if instances is None:
+
+        def body(carry: HierAssoc, batch):
+            r, c, v = batch
+            nxt = hierarchical.update_triples(carry, r, c, v, cuts, sr)
+            return nxt, hierarchical.nnz_total(nxt)
+
+    else:
+        if rows.ndim != 3 or rows.shape[1] != int(instances):
+            raise ValueError(
+                f"expected [T, {int(instances)}, B] instance-major stream, "
+                f"got {rows.shape}"
+            )
+
+        def body(carry: HierAssoc, batch):
+            r, c, v = batch
+            nxt = multistream.packed_update(carry, r, c, v, cuts, sr)
+            return nxt, multistream.nnz_per_instance(nxt)
 
     return lax.scan(body, h, (rows, cols, vals))
 

@@ -1,6 +1,13 @@
 """Shared test fixtures.  NOTE: no XLA_FLAGS device-count forcing here —
 smoke tests and benches must see the real single CPU device; only
 ``launch/dryrun.py`` (run as a script) forces 512 placeholder devices."""
+import os
+import sys
+
+# make `_hypothesis_fallback` importable from test modules regardless of how
+# pytest inserted their own directories into sys.path
+sys.path.insert(0, os.path.dirname(__file__))
+
 import jax
 import numpy as np
 import pytest

@@ -1,0 +1,233 @@
+"""Tests for the instance-packed multi-stream engine.
+
+The load-bearing property: a packed K-instance ingest must be
+indistinguishable from K sequential single-instance ingests of the same
+routed sub-streams — snapshots, cascade-count telemetry, and overflow flags
+all identical.  That equivalence is what licenses reading the packed
+aggregate rate as "K independent instances", i.e. the paper's Fig. 6 axis.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import assoc, hierarchical, multistream, streaming
+from repro.core.assoc import PAD
+
+SPACE = 64
+
+
+def _routed_stream(seed, steps, batch, k, space=SPACE):
+    """A [T, B] global stream hash-routed into [T, K, B] sub-streams."""
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(rng.integers(0, space, (steps, batch)), jnp.int32)
+    c = jnp.asarray(rng.integers(0, space, (steps, batch)), jnp.int32)
+    v = jnp.ones((steps, batch), jnp.float32)
+    routed = [
+        multistream.route_to_instances(r[t], c[t], v[t], k, batch)
+        for t in range(steps)
+    ]
+    assert all(int(x[3]) == 0 for x in routed)  # slot_cap = batch: no drops
+    R = jnp.stack([x[0] for x in routed])
+    C = jnp.stack([x[1] for x in routed])
+    V = jnp.stack([x[2] for x in routed])
+    return (r, c, v), (R, C, V)
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+def test_route_partitions_exactly():
+    rng = np.random.default_rng(0)
+    rows = jnp.asarray(rng.integers(0, 256, 128), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, 256, 128), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=128), jnp.float32)
+    k = 8
+    br, bc, bv, dropped = multistream.route_to_instances(rows, cols, vals, k, 128)
+    assert int(dropped) == 0
+    want_owner = np.asarray(multistream.instance_of(rows, cols, k))
+    got = []
+    for inst in range(k):
+        live = np.asarray(br[inst]) != PAD
+        for r, c, v in zip(
+            np.asarray(br[inst])[live],
+            np.asarray(bc[inst])[live],
+            np.asarray(bv[inst])[live],
+        ):
+            got.append((int(r), int(c), float(v)))
+            # every triple landed at its hash owner
+            idxs = np.flatnonzero(
+                (np.asarray(rows) == r) & (np.asarray(cols) == c)
+            )
+            assert (want_owner[idxs] == inst).all()
+    want = sorted(
+        zip(
+            np.asarray(rows).tolist(),
+            np.asarray(cols).tolist(),
+            np.asarray(vals).tolist(),
+        )
+    )
+    assert sorted(got) == want  # multiset of triples preserved
+
+
+def test_route_is_key_stable():
+    """The same (row, col) key must always route to the same instance."""
+    rows = jnp.asarray([3, 3, 3, 7], jnp.int32)
+    cols = jnp.asarray([5, 5, 5, 7], jnp.int32)
+    own1 = np.asarray(multistream.instance_of(rows, cols, 16))
+    own2 = np.asarray(multistream.instance_of(rows, cols, 16))
+    np.testing.assert_array_equal(own1, own2)
+    assert own1[0] == own1[1] == own1[2]
+
+
+def test_route_drops_are_counted_and_pads_ignored():
+    rows = jnp.asarray([1] * 12 + [PAD] * 4, jnp.int32)
+    cols = jnp.asarray([2] * 12 + [PAD] * 4, jnp.int32)
+    vals = jnp.ones((16,), jnp.float32)
+    # all 12 live triples share one key -> one instance; slot_cap 8 -> 4 drop
+    br, _, _, dropped = multistream.route_to_instances(rows, cols, vals, 4, 8)
+    assert int(dropped) == 4
+    assert int((np.asarray(br) != PAD).sum()) == 8
+
+
+def test_route_spreads_powerlaw_keys():
+    """Hash routing must spread distinct keys roughly evenly (no hot shard)."""
+    rng = np.random.default_rng(1)
+    rows = jnp.asarray(rng.integers(0, 4, 4096), jnp.int32)  # 4 hot rows
+    cols = jnp.asarray(rng.integers(0, 1024, 4096), jnp.int32)
+    own = np.asarray(multistream.instance_of(rows, cols, 8))
+    counts = np.bincount(own, minlength=8)
+    assert counts.min() > 0.5 * counts.mean()
+    assert counts.max() < 1.5 * counts.mean()
+
+
+# ---------------------------------------------------------------------------
+# packed ingest == K sequential single-instance ingests
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cuts", [(), (32,), (16, 128)])
+def test_packed_equals_sequential(cuts):
+    k, steps, batch = 4, 10, 32
+    _, (R, C, V) = _routed_stream(0, steps, batch, k)
+    hp = multistream.init_packed(k, cuts, top_capacity=1024, batch_size=batch)
+    step = streaming.make_update_fn(cuts, donate=False, instances=k)
+    for t in range(steps):
+        hp = step(hp, R[t], C[t], V[t])
+    snap_p = multistream.snapshot_packed(hp, cap=2048)
+    for inst in range(k):
+        hs = hierarchical.init(cuts, top_capacity=1024, batch_size=batch)
+        sstep = streaming.make_update_fn(cuts, donate=False)
+        for t in range(steps):
+            hs = sstep(hs, R[t, inst], C[t, inst], V[t, inst])
+        # identical snapshots...
+        snap_s = hierarchical.snapshot(hs, cap=2048)
+        got = jax.tree.map(lambda x: x[inst], snap_p)
+        np.testing.assert_allclose(
+            np.asarray(assoc.to_dense(got, SPACE, SPACE)),
+            np.asarray(assoc.to_dense(snap_s, SPACE, SPACE)),
+        )
+        # ...identical cascade telemetry...
+        np.testing.assert_array_equal(
+            np.asarray(hp.cascades[inst]), np.asarray(hs.cascades)
+        )
+        # ...identical overflow flags and nnz
+        assert bool(multistream.overflowed_per_instance(hp)[inst]) == bool(
+            hierarchical.overflowed(hs)
+        )
+        assert int(multistream.nnz_per_instance(hp)[inst]) == int(
+            hierarchical.nnz_total(hs)
+        )
+
+
+def test_packed_overflow_flags_are_per_instance():
+    """Under-size one instance's stream so only that lane overflows."""
+    k, batch = 2, 32
+    cuts = ()
+    # single layer capacity = top_capacity + batch = 40; instance 0 receives
+    # 64 distinct keys over two batches, instance 1 hammers one key
+    hp = multistream.init_packed(k, cuts, top_capacity=8, batch_size=batch)
+    for step in range(2):
+        ks = jnp.arange(batch, dtype=jnp.int32) + step * batch
+        r = jnp.stack([ks, jnp.zeros((batch,), jnp.int32)])
+        c = jnp.stack([ks, jnp.zeros((batch,), jnp.int32)])
+        v = jnp.ones((k, batch), jnp.float32)
+        hp = multistream.packed_update(hp, r, c, v, cuts)
+    flags = np.asarray(multistream.overflowed_per_instance(hp))
+    assert bool(flags[0]) and not bool(flags[1])
+
+
+def test_scan_ingest_instances_path():
+    k, steps, batch = 4, 8, 32
+    cuts = (16, 64)
+    _, (R, C, V) = _routed_stream(3, steps, batch, k)
+    h0 = multistream.init_packed(k, cuts, top_capacity=1024, batch_size=batch)
+    h_scan, trace = streaming.ingest_stream(h0, R, C, V, cuts, instances=k)
+    assert trace.shape == (steps, k)
+    h_loop = h0
+    step = streaming.make_update_fn(cuts, donate=False, instances=k)
+    for t in range(steps):
+        h_loop = step(h_loop, R[t], C[t], V[t])
+    sp_scan = multistream.snapshot_packed(h_scan, cap=2048)
+    sp_loop = multistream.snapshot_packed(h_loop, cap=2048)
+    for inst in range(k):
+        np.testing.assert_allclose(
+            np.asarray(assoc.to_dense(jax.tree.map(lambda x: x[inst], sp_scan), SPACE, SPACE)),
+            np.asarray(assoc.to_dense(jax.tree.map(lambda x: x[inst], sp_loop), SPACE, SPACE)),
+        )
+    np.testing.assert_array_equal(
+        np.asarray(trace[-1]), np.asarray(multistream.nnz_per_instance(h_scan))
+    )
+
+
+def test_merge_snapshots_equals_global_dense():
+    k, steps, batch = 3, 6, 32  # odd K exercises the pad-to-pow2 path
+    cuts = (16,)
+    (r, c, v), (R, C, V) = _routed_stream(5, steps, batch, k)
+    hp = multistream.init_packed(k, cuts, top_capacity=1024, batch_size=batch)
+    for t in range(steps):
+        hp = multistream.packed_update(hp, R[t], C[t], V[t], cuts)
+    snap = multistream.merge_snapshots(
+        multistream.snapshot_packed(hp, cap=2048), cap=2048
+    )
+    ref = np.zeros((SPACE, SPACE), np.float32)
+    np.add.at(ref, (np.asarray(r).ravel(), np.asarray(c).ravel()), np.asarray(v).ravel())
+    np.testing.assert_allclose(np.asarray(assoc.to_dense(snap, SPACE, SPACE)), ref)
+
+
+# ---------------------------------------------------------------------------
+# mesh-composed engine (single device in the unit suite; multi-device
+# coverage comes from benchmarks/bench_scaling.py under forced XLA devices)
+# ---------------------------------------------------------------------------
+
+def test_engine_single_device_packed():
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    eng = multistream.MultiStreamEngine(
+        mesh, (16,), top_capacity=2048, batch_size=64, instances_per_device=4
+    )
+    assert eng.n_instances == 4
+    h = eng.init_state()
+    rng = np.random.default_rng(7)
+    ref = np.zeros((SPACE, SPACE), np.float32)
+    for _ in range(4):
+        r = jnp.asarray(rng.integers(0, SPACE, 128), jnp.int32)
+        c = jnp.asarray(rng.integers(0, SPACE, 128), jnp.int32)
+        v = jnp.ones((128,), jnp.float32)
+        h, dropped = eng.ingest(h, r, c, v)
+        assert int(dropped) == 0
+        np.add.at(ref, (np.asarray(r), np.asarray(c)), 1.0)
+    snap = eng.snapshot_global(h, cap=2048)
+    np.testing.assert_allclose(np.asarray(assoc.to_dense(snap, SPACE, SPACE)), ref)
+    tel = eng.telemetry(h)
+    assert tel["n_instances"] == 4
+    assert tel["nnz_per_instance"].shape == (4,)
+    assert not tel["overflowed_per_instance"].any()
+    assert int(eng.global_nnz(h)) == int(tel["nnz_total"])
+
+
+def test_engine_rejects_bad_instances():
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    with pytest.raises(ValueError):
+        multistream.MultiStreamEngine(
+            mesh, (16,), top_capacity=128, batch_size=8, instances_per_device=0
+        )
