@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.reporting import BenchmarkReport
-from repro.core import hierarchical, streaming
+from repro import d4m
 from repro.data import rmat
 
 
@@ -36,28 +36,33 @@ def run_stream(
     top_capacity: int,
     seed: int = 0,
 ) -> Tuple[List[float], float, int]:
-    """Returns (per-group instantaneous rates, cumulative rate, final nnz)."""
-    cuts = tuple(cuts)
-    h = hierarchical.init(cuts, top_capacity=top_capacity, batch_size=group_size)
-    step = streaming.make_update_fn(cuts)
+    """Returns (per-group instantaneous rates, cumulative rate, final nnz).
+
+    Single instance on one device — the session resolves to the ``lax.cond``
+    cascade (the seed's exact per-group program), so archived rate
+    trajectories stay comparable across commits.
+    """
+    sess = d4m.D4MStream(d4m.StreamConfig(
+        cuts=tuple(cuts), top_capacity=top_capacity, batch_size=group_size
+    ))
+    assert sess.kind == "single"
     rates = []
-    n_groups = total_edges // group_size
     # warmup/compile on one group (excluded from timing)
     s, d, v = next(rmat.edge_stream(seed + 999, group_size, group_size, scale))
-    h = step(h, s, d, v)
-    h = jax.block_until_ready(h)
-    h = hierarchical.init(cuts, top_capacity=top_capacity, batch_size=group_size)
+    sess.update(s, d, v)
+    jax.block_until_ready(sess.state)
+    sess.reset()
     t_total = 0.0
     for s, d, v in rmat.edge_stream(seed, total_edges, group_size, scale):
         jax.block_until_ready((s, d, v))
         t0 = time.perf_counter()
-        h = step(h, s, d, v)
-        h = jax.block_until_ready(h)
+        sess.update(s, d, v)
+        jax.block_until_ready(sess.state)
         dt = time.perf_counter() - t0
         t_total += dt
         rates.append(group_size / dt)
-    nnz = int(hierarchical.nnz_total(h))
-    assert not bool(hierarchical.overflowed(h)), "hierarchy overflow: sizing bug"
+    nnz = sess.nnz()
+    assert not sess.overflowed(), "hierarchy overflow: sizing bug"
     return rates, total_edges / t_total, nnz
 
 

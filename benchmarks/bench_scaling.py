@@ -39,13 +39,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.reporting import BenchmarkReport
-from repro.core import distributed, hierarchical, multistream
+from repro import d4m
 from repro.data import rmat
 
 
-def _mesh(n_dev: int):
-    devs = jax.devices()[:n_dev]
-    return jax.sharding.Mesh(np.asarray(devs).reshape(n_dev), ("data",))
+def make_session(
+    k_per_device: int,
+    n_dev: int,
+    cuts,
+    top_capacity: int,
+    group_size: int,
+    branchless: bool | None = True,
+) -> d4m.D4MStream:
+    """A mesh-engine session (forced even at D=1 so every sweep point runs
+    the identical shard_map program structure — the seed's measurement)."""
+    return d4m.D4MStream(d4m.StreamConfig(
+        cuts=tuple(cuts),
+        top_capacity=top_capacity,
+        batch_size=group_size,
+        instances_per_device=k_per_device,
+        devices=n_dev,
+        engine="mesh",
+        branchless=branchless,
+    ))
 
 
 def run_packed(
@@ -68,19 +84,10 @@ def run_packed(
     isolates packing; pass ``None`` for the engine's auto (cond at K = 1)
     behavior.  Returns ``(aggregate_rate, wall_s, n_instances)``.
     """
-    mesh = _mesh(n_dev)
     cuts = cuts if cuts is not None else (group_size, 4 * group_size)
     top = top_capacity if top_capacity is not None else int(groups * group_size * 1.25)
-    eng = multistream.MultiStreamEngine(
-        mesh,
-        cuts,
-        top_capacity=top,
-        batch_size=group_size,
-        instances_per_device=k_per_device,
-        branchless=branchless,
-    )
-    n_inst = eng.n_instances
-    h = eng.init_state()
+    sess = make_session(k_per_device, n_dev, cuts, top, group_size, branchless)
+    n_inst = sess.n_instances
     # pre-generate the whole stream (host) so timing is pure update cost
     key = jax.random.PRNGKey(0)
     batches = []
@@ -88,15 +95,15 @@ def run_packed(
         key, sub = jax.random.split(key)
         keys = jax.random.split(sub, n_inst)
         s, d = jax.vmap(lambda k: rmat.rmat_edges(k, group_size, scale))(keys)
-        batches.append(eng.shard_stream(s, d, jnp.ones((n_inst, group_size))))
+        batches.append(sess.shard_stream(s, d, jnp.ones((n_inst, group_size))))
     # warmup/compile (excluded from timing)
-    h = eng.update(h, *batches[0])
-    jax.block_until_ready(h)
-    h = eng.init_state()
+    sess.update(*batches[0])
+    jax.block_until_ready(sess.state)
+    sess.reset()
     t0 = time.perf_counter()
     for b in batches:
-        h = eng.update(h, *b)
-    jax.block_until_ready(h)
+        sess.update(*b)
+    jax.block_until_ready(sess.state)
     dt = time.perf_counter() - t0
     total_updates = n_inst * groups * group_size
     return total_updates / dt, dt, n_inst
@@ -136,17 +143,19 @@ def update_path_collectives(n_dev: int = None, k_per_device: int = 4) -> dict:
     import re
 
     n_dev = n_dev or len(jax.devices())
-    mesh = _mesh(n_dev)
-    eng = multistream.MultiStreamEngine(
-        mesh, (64,), top_capacity=4096, batch_size=32,
-        instances_per_device=k_per_device,
+    sess = make_session(
+        k_per_device, n_dev, (64,), top_capacity=4096, group_size=32,
+        branchless=None,
     )
-    h = eng.init_state()
-    n = eng.n_instances
+    n = sess.n_instances
     r = jnp.zeros((n, 32), jnp.int32)
     c = jnp.zeros((n, 32), jnp.int32)
     v = jnp.ones((n, 32))
-    txt = eng.update.lower(h, *eng.shard_stream(r, c, v)).compile().as_text()
+    txt = (
+        sess.raw_update.lower(sess.state, *sess.shard_stream(r, c, v))
+        .compile()
+        .as_text()
+    )
     out = {}
     for k in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute"):
         out[k] = len(re.findall(rf"= [\w\[\],{{}}]+ {k}[(-]", txt))

@@ -1,0 +1,120 @@
+"""Benchmark regression gate: diff fresh ``BENCH_<section>.json`` artifacts
+against a baseline run (the previous CI artifact, per the ROADMAP convention).
+
+For every measurement present in BOTH runs (matched by section + name +
+params) that carries an ``updates_per_sec`` rate:
+
+* drop  > ``--fail`` (default 30%)  -> exit 1 (regression gate trips)
+* drop  > ``--warn`` (default 10%)  -> warning line, exit 0
+* otherwise                         -> ok line
+
+Boolean ``passed`` verdicts regressing from true to false also trip the
+gate (a shape/structure property broke, not just a rate).
+
+A missing/empty baseline directory exits 0 with a note — the first run on a
+branch, or an expired artifact, must not block CI.
+
+Usage:
+  python -m benchmarks.regression_gate --baseline bench-baseline \
+      --fresh bench-artifacts [--warn 0.10] [--fail 0.30]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, Tuple
+
+
+def _key(section: str, m: dict) -> Tuple:
+    params = tuple(sorted((k, repr(v)) for k, v in (m.get("params") or {}).items()))
+    return (section, m.get("name"), params)
+
+
+def load_measurements(dir_path: str) -> Dict[Tuple, dict]:
+    out: Dict[Tuple, dict] = {}
+    for path in sorted(glob.glob(os.path.join(dir_path, "BENCH_*.json"))):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"gate,unreadable,{path},{e}")
+            continue
+        section = payload.get("section", os.path.basename(path))
+        for m in payload.get("measurements", []):
+            out[_key(section, m)] = m
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="directory with the previous run's BENCH_*.json")
+    ap.add_argument("--fresh", required=True,
+                    help="directory with this run's BENCH_*.json")
+    ap.add_argument("--warn", type=float, default=0.10,
+                    help="rate-drop fraction that warns (default 0.10)")
+    ap.add_argument("--fail", type=float, default=0.30,
+                    help="rate-drop fraction that fails (default 0.30)")
+    args = ap.parse_args(argv)
+
+    fresh = load_measurements(args.fresh)
+    if not fresh:
+        print(f"gate,error,no fresh BENCH_*.json under {args.fresh}")
+        return 1
+    baseline = load_measurements(args.baseline) if os.path.isdir(args.baseline) else {}
+    if not baseline:
+        print(
+            f"gate,skip,no baseline artifacts under {args.baseline} "
+            f"(first run or expired artifact) - nothing to compare"
+        )
+        return 0
+
+    failures, warnings_, compared = [], [], 0
+    for key, fm in sorted(fresh.items()):
+        bm = baseline.get(key)
+        if bm is None:
+            continue
+        params = fm.get("params") or {}
+        short = ",".join(f"{k}={v}" for k, v in sorted(params.items())[:3])
+        label = f"{key[0]}/{key[1]}" + (f"[{short}]" if short else "")
+        if "updates_per_sec" in fm and "updates_per_sec" in bm:
+            compared += 1
+            base, now = float(bm["updates_per_sec"]), float(fm["updates_per_sec"])
+            if base <= 0:
+                continue
+            drop = (base - now) / base
+            tag = "ok"
+            if drop > args.fail:
+                tag = "FAIL"
+                failures.append(label)
+            elif drop > args.warn:
+                tag = "WARN"
+                warnings_.append(label)
+            print(
+                f"gate,{tag},{label},baseline={base:,.0f}/s,fresh={now:,.0f}/s,"
+                f"drop={drop:+.1%}"
+            )
+        elif "passed" in fm and "passed" in bm:
+            compared += 1
+            if bool(bm["passed"]) and not bool(fm["passed"]):
+                failures.append(label)
+                print(f"gate,FAIL,{label},verdict regressed true -> false")
+            else:
+                print(f"gate,ok,{label},verdict={fm['passed']}")
+
+    print(
+        f"gate,summary,compared={compared},warned={len(warnings_)},"
+        f"failed={len(failures)}"
+    )
+    if failures:
+        print(f"gate,verdict,FAIL,regressions: {', '.join(failures)}")
+        return 1
+    print("gate,verdict,PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,16 +1,16 @@
-"""Quickstart: the paper in 60 seconds.
+"""Quickstart: the paper in 60 seconds, on the unified `repro.d4m` API.
 
 Build hypersparse associative arrays from a network-traffic-like stream,
 push them through a hierarchical cascade, and query the result — the exact
-Fig. 1 / Section III workflow on synthetic IPv4 traffic.
+Fig. 1 / Section III workflow on synthetic IPv4 traffic, written as the
+paper writes it: one config, one session, operator algebra.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import assoc, hierarchical, semiring, streaming
+from repro import d4m
 from repro.data import dictionary, rmat
 
 
@@ -19,37 +19,49 @@ def main():
     src = dictionary.encode_ipv4(["1.1.1.1", "1.1.1.1", "10.0.0.7", "8.8.8.8"])
     dst = dictionary.encode_ipv4(["2.2.2.2", "3.3.3.3", "1.1.1.1", "1.1.1.1"])
     vals = jnp.ones((4,))
-    A = assoc.from_triples(jnp.asarray(src), jnp.asarray(dst), vals, cap=8)
+    A = d4m.from_triples(jnp.asarray(src), jnp.asarray(dst), vals, cap=8)
     print("nnz:", int(A.nnz))
 
-    # nearest neighbours of 1.1.1.1 (Fig. 1's operation): row slice
+    # Fig. 1 one-liners, operator algebra under the ambient cap policy:
     one = int(dictionary.encode_ipv4(["1.1.1.1"])[0])
-    row = assoc.extract_row(A, one, cap=8)
+    row = A[one, :]                      # nearest out-neighbours of 1.1.1.1
     print("out-neighbours of 1.1.1.1:", int(row.nnz))
+    sym = A + A.T                        # undirected view (table union)
+    print("undirected support nnz:", int(sym.nnz))
+    hot = A & sym                        # intersection (element-wise mul)
+    print("A & (A + A.T) nnz:", int(hot.nnz))
+    with d4m.cap_policy(matmul_cap=64, max_fanout=4):
+        two_hop = A @ A                  # semiring spGEMM
+    print("two-hop pairs:", int(two_hop.nnz))
 
-    # semiring flexibility: max.plus over the same triples
-    B = assoc.from_triples(
-        jnp.asarray(src), jnp.asarray(dst), vals, cap=8, sr=semiring.MAX_PLUS
-    )
-    print("max.plus build ok, nnz:", int(B.nnz))
+    # semiring flexibility: the same algebra under max.plus
+    with d4m.cap_policy(sr=d4m.MAX_PLUS):
+        B = d4m.from_triples(
+            jnp.asarray(src), jnp.asarray(dst), vals, cap=8, sr=d4m.MAX_PLUS
+        )
+        print("max.plus union nnz:", int((B + B.T).nnz))
 
     # --- 2. hierarchical streaming (Section III) ---------------------------
-    cuts = (1024, 8192)
     group = 512
-    h = hierarchical.init(cuts, top_capacity=200_000, batch_size=group)
-    step = streaming.make_update_fn(cuts)
+    cfg = d4m.StreamConfig(
+        cuts=(1024, 8192), top_capacity=200_000, batch_size=group
+    )
+    print(cfg.plan().describe())
+    sess = d4m.D4MStream(cfg)
     for s, d, v in rmat.edge_stream(
         seed=0, total_edges=16_384, group_size=group, scale=14
     ):
-        h = step(h, s, d, v)
-    print("stream ingested; per-layer nnz:", [int(l.nnz) for l in h.layers])
-    print("cascades per layer:", np.asarray(h.cascades).tolist())
+        sess.update(s, d, v)
+    tel = sess.telemetry()
+    print("stream ingested; per-layer nnz:", tel["nnz_per_layer"])
+    print("cascades per layer:", np.asarray(tel["cascades"]).tolist())
 
-    # --- 3. analysis handoff: snapshot + degrees ----------------------------
-    snap = hierarchical.snapshot(h, cap=400_000)
-    deg = assoc.reduce_rows(snap, cap=400_000)
-    top = jnp.argsort(-deg.vals)[:5]
-    print("top-5 out-degree vertices:", deg.rows[top].tolist(), deg.vals[top].tolist())
+    # --- 3. analysis: the bound query namespace ----------------------------
+    ids, counts = sess.query.top_k(5)
+    print("top-5 out-degree vertices:", ids.tolist(), counts.tolist())
+    snap = sess.snapshot()
+    print("snapshot nnz:", int(snap.nnz), "| heavy hitters via operator:",
+          snap.topk(3)[0].tolist())
 
 
 if __name__ == "__main__":

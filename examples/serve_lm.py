@@ -1,5 +1,9 @@
 """Serving example: batched greedy decoding through the static-capacity
-cache (ring-buffer SWA caches, MLA latents, or SSM state depending on arch).
+cache (ring-buffer SWA caches, MLA latents, or SSM state depending on arch),
+with decode-stream telemetry kept in a `repro.d4m` session — the generated
+token stream is itself a hypersparse network ((prev, next) bigram graph),
+so the serving loop tracks it with the same associative-array machinery the
+paper uses for traffic.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py --arch mamba2_1_3b
 """
@@ -10,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import d4m
 from repro.configs import ARCH_IDS, get_config, reduced
 from repro.models import serving as SV
 from repro.models import transformer as TF
@@ -41,6 +46,20 @@ def main():
     print(f"arch={cfg.name} generated {out.shape} in {dt:.2f}s "
           f"({toks/dt:.0f} tok/s incl. compile)")
     print("sample:", np.asarray(out[0][:12]).tolist())
+
+    # decode-stream telemetry: bigram graph of the generated tokens in a
+    # hypersparse session (keys = (prev_token, next_token), values = counts)
+    n_pairs = out.shape[0] * (out.shape[1] - 1)
+    tel = d4m.D4MStream(d4m.StreamConfig(
+        cuts=(max(64, n_pairs // 2),), top_capacity=4 * n_pairs,
+        batch_size=n_pairs,
+    ))
+    tel.update(out[:, :-1].reshape(-1), out[:, 1:].reshape(-1),
+               jnp.ones((n_pairs,)))
+    k = min(3, tel.nnz())
+    ids, counts = tel.snapshot().topk(k)
+    print(f"decode telemetry: {tel.nnz()} distinct bigrams; top sources "
+          f"{ids.tolist()} x{[int(c) for c in counts.tolist()]}")
 
 
 if __name__ == "__main__":

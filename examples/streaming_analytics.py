@@ -1,37 +1,40 @@
 """End-to-end driver for the paper's own application: streaming network
-analytics over hypersparse traffic, multi-instance, with checkpoint/restart.
+analytics over hypersparse traffic, multi-instance, with checkpoint/restart —
+written on the unified `repro.d4m` session API.
 
-Mirrors the Section V experiment structure: N independent hierarchical-array
-instances (shard_map; zero update-path collectives) ingesting R-MAT power-law
-streams in fixed groups, periodically snapshotting analysis products (degree
-distributions), with the stream cursor checkpointed for fault tolerance.
+Mirrors the Section V experiment structure: the session auto-selects the
+mesh engine at D>1 (shard_map; zero update-path collectives) or the single
+lax.cond cascade at D=1, ingests R-MAT power-law streams in fixed groups,
+periodically snapshots analysis products (degree heavy hitters via the bound
+query namespace), and checkpoints the stream cursor for fault tolerance.
 
 Run (multi-instance):
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
   PYTHONPATH=src python examples/streaming_analytics.py
 """
-import os
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.checkpoint.manager import CheckpointManager
-from repro.core import assoc, distributed, hierarchical
+from repro import d4m
 from repro.data import rmat
 
 
 def main():
     n_dev = len(jax.devices())
-    mesh = jax.sharding.Mesh(np.asarray(jax.devices()).reshape(n_dev), ("data",))
     group = 4096
-    cuts = (2 * group, 16 * group)
-    ps = distributed.ParallelHierStream(
-        mesh, cuts, top_capacity=2_000_000, batch_size=group
+    cfg = d4m.StreamConfig(
+        cuts=(2 * group, 16 * group),
+        top_capacity=2_000_000,
+        batch_size=group,
+        devices=n_dev,  # D>1 -> mesh engine (shard_map), D=1 -> lax.cond
+        snapshot_cap=3_000_000,  # ~650 K distinct keys in this stream
     )
-    h = ps.init_state()
-    mgr = CheckpointManager("/tmp/repro_stream_ckpt", keep=2)
+    print(cfg.plan().describe())
+    sess = d4m.D4MStream(cfg, checkpoint_dir="/tmp/repro_stream_ckpt",
+                         checkpoint_keep=2)
+    print("session:", sess)
 
     groups = 40
     key = jax.random.PRNGKey(0)
@@ -39,25 +42,33 @@ def main():
     done = 0
     for g in range(groups):
         key, sub = jax.random.split(key)
-        keys = jax.random.split(sub, n_dev)
+        keys = jax.random.split(sub, sess.n_instances)
         s, d = jax.vmap(lambda k: rmat.rmat_edges(k, group, 18))(keys)
-        h = ps.update(h, *ps.shard_stream(s, d, jnp.ones((n_dev, group))))
-        done += n_dev * group
+        v = jnp.ones((sess.n_instances, group))
+        if sess.kind == "single":
+            sess.update(s[0], d[0], v[0])
+        else:
+            sess.update(*sess.shard_stream(s, d, v))
+        done += sess.n_instances * group
         if (g + 1) % 20 == 0:
-            mgr.save_async(g + 1, h, extra={"cursor": g + 1})
+            sess.checkpoint(g + 1, extra={"cursor": g + 1})
             rate = done / (time.perf_counter() - t0)
             print(
                 f"group {g+1}: {done:,} updates, aggregate {rate:,.0f} upd/s, "
-                f"global nnz {int(ps.global_nnz(h)):,}"
+                f"global nnz {sess.nnz():,}"
             )
-    mgr.wait()
+    sess.wait_checkpoint()
+
+    # analysis products through the bound query namespace
+    ids, counts = sess.query.top_k(5)
+    print("top-5 out-degree vertices:", ids.tolist(),
+          [int(x) for x in counts.tolist()])
 
     # restart drill: restore and verify the stream resumes where it left off
-    like = jax.tree.map(jnp.zeros_like, h)
-    restored, extra = mgr.restore(like)
+    extra = sess.restore()
     print(f"restored checkpoint at group {extra['cursor']} — restart drill ok")
-    print(f"final aggregate rate: {done / (time.perf_counter() - t0):,.0f} updates/s "
-          f"on {n_dev} instances")
+    print(f"final aggregate rate: {done / (time.perf_counter() - t0):,.0f} "
+          f"updates/s on {sess.n_instances} instances")
 
 
 if __name__ == "__main__":

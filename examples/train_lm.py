@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import d4m
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import ARCH_IDS, get_config, reduced
 from repro.data.tokens import Prefetcher, TokenStream
@@ -46,9 +47,19 @@ def main():
     mgr = CheckpointManager(args.ckpt_dir, keep=2)
     mon = straggler.StragglerMonitor(1)
     tokens_per_micro = args.batch * args.seq
-    hg_cfg = HG.HierGradConfig(
+    # capacity-plan the embedding-grad cascade through the unified D4M
+    # config: same telescoping rule as the streaming sessions, so the
+    # accumulator's memory footprint is reported before allocation
+    grad_plan_cfg = d4m.StreamConfig(
         cuts=(2 * tokens_per_micro, 8 * tokens_per_micro),
         top_capacity=min(cfg.vocab_padded, 1 << 16),
+        batch_size=tokens_per_micro,
+    )
+    print("embedding-grad id cascade:")
+    print(grad_plan_cfg.plan().describe())
+    hg_cfg = HG.HierGradConfig(
+        cuts=grad_plan_cfg.resolved_cuts(),
+        top_capacity=grad_plan_cfg.top_capacity,
     )
 
     @jax.jit

@@ -1,10 +1,19 @@
 """The paper's own workload: Graph500 R-MAT power-law edge streams into
-hierarchical associative arrays (100 M edges in 100 K-edge groups)."""
+hierarchical associative arrays (100 M edges in 100 K-edge groups).
+
+This is the *workload* config (stream shape + R-MAT parameters); the
+*session* config — cuts, capacities, engines — is
+:class:`repro.d4m.StreamConfig`.  :meth:`WorkloadConfig.to_session` bridges
+the two so the canonical experiments are runnable in three lines::
+
+    from repro.configs.d4m_stream import BENCH
+    sess = repro.d4m.D4MStream(BENCH.to_session())
+"""
 import dataclasses
 
 
 @dataclasses.dataclass(frozen=True)
-class StreamConfig:
+class WorkloadConfig:
     scale: int = 20  # R-MAT scale: 2**scale vertices
     total_edges: int = 100_000_000
     group_size: int = 100_000
@@ -15,11 +24,28 @@ class StreamConfig:
     c: float = 0.19  # R-MAT probabilities (Graph500)
     seed: int = 0
 
+    def to_session(self, **overrides):
+        """The matching :class:`repro.d4m.StreamConfig` for this workload."""
+        from repro.d4m import StreamConfig
 
-CONFIG = StreamConfig()
+        kw = dict(
+            cuts=self.cuts,
+            top_capacity=self.top_capacity,
+            batch_size=self.group_size,
+            seed=self.seed,
+        )
+        kw.update(overrides)
+        return StreamConfig(**kw)
+
+
+# Backwards-compatible alias (this module predates repro.d4m.StreamConfig,
+# which now owns the "StreamConfig" name repo-wide).
+StreamConfig = WorkloadConfig
+
+CONFIG = WorkloadConfig()
 
 # CPU-bench variant (same structure, laptop-scale)
-BENCH = StreamConfig(
+BENCH = WorkloadConfig(
     scale=16, total_edges=2_000_000, group_size=20_000,
     cuts=(20_000, 200_000), top_capacity=3_000_000,
 )

@@ -28,23 +28,36 @@ from .assoc import Assoc, PAD
 from .semiring import MAX_MIN, PLUS_TIMES, Semiring
 
 
-def degrees(a: Assoc, cap: int | None = None) -> Tuple[Assoc, Assoc]:
-    """(out_degree, in_degree) as 1-D associative arrays keyed (vertex, 0)."""
-    return assoc.reduce_rows(a, cap), assoc.reduce_cols(a, cap)
+def degrees(
+    a: Assoc, cap: int | None = None, sr: Semiring = PLUS_TIMES
+) -> Tuple[Assoc, Assoc]:
+    """(out_degree, in_degree) as 1-D associative arrays keyed (vertex, 0);
+    each row/col is folded with ``sr.add`` (a sum for plus.times counts, a
+    row-max for max.plus, ...)."""
+    return assoc.reduce_rows(a, cap, sr), assoc.reduce_cols(a, cap, sr)
 
 
 def top_k_vertices(deg: Assoc, k: int) -> Tuple[jax.Array, jax.Array]:
     """Heaviest-k vertices from a degree array: (ids [k], counts [k])."""
-    vals = jnp.where(deg.rows != PAD, deg.vals, -jnp.inf)
-    top_vals, idx = jax.lax.top_k(vals, k)
-    return deg.rows[idx], top_vals
+    return deg.topk(k)
 
 
-def undirected_view(a: Assoc, cap: int | None = None) -> Assoc:
-    """A (+) A^T with unit weights collapsed — the symmetric support."""
+def undirected_view(
+    a: Assoc, cap: int | None = None, sr: Semiring = PLUS_TIMES
+) -> Assoc:
+    """A (+) A^T with weights collapsed to ``sr.one`` — the symmetric support.
+
+    Dead slots hold ``sr.zero`` (not a hardcoded 0.0) so the result is a
+    well-formed array under any semiring, e.g. ``MAX_PLUS`` where the
+    additive identity is ``-inf``.
+    """
     cap = cap or 2 * a.capacity
-    sym = assoc.add(a, assoc.transpose(a), cap=cap)
-    ones = jnp.where(sym.rows != PAD, 1.0, 0.0).astype(sym.vals.dtype)
+    sym = assoc.add(a, assoc.transpose(a, sr=sr), cap=cap, sr=sr)
+    ones = jnp.where(
+        sym.rows != PAD,
+        jnp.asarray(sr.one, sym.vals.dtype),
+        jnp.asarray(sr.zero, sym.vals.dtype),
+    )
     return Assoc(sym.rows, sym.cols, ones, sym.nnz, sym.overflow)
 
 
@@ -92,14 +105,25 @@ def jaccard(a: Assoc, u: int, v: int, cap: int) -> jax.Array:
 
 
 def reachable_within(
-    a: Assoc, steps: int, cap: int, max_fanout: int
+    a: Assoc, steps: int, cap: int, max_fanout: int, sr: Semiring = MAX_MIN
 ) -> Assoc:
-    """k-step reachability closure via max.min semiring powers:
-    R_k = R_{k-1} (+) R_{k-1} A  (boolean algebra on [0, 1] weights)."""
-    ones = jnp.where(a.rows != PAD, 1.0, 0.0).astype(a.vals.dtype)
+    """k-step reachability closure via idempotent-semiring powers:
+    R_k = R_{k-1} (+) R_{k-1} A  (boolean algebra on {sr.zero, sr.one}).
+
+    Present edges carry ``sr.one`` and absent ones ``sr.zero``, so the
+    closure round-trips under any boolean-like semiring: with the default
+    ``MAX_MIN`` reachable pairs hold ``inf`` (its multiplicative identity),
+    with ``MIN_MAX`` they hold ``0.0``, etc.  Query results with
+    ``assoc.get(r, u, v, sr=sr)`` and compare against ``sr.one``/``sr.zero``.
+    """
+    ones = jnp.where(
+        a.rows != PAD,
+        jnp.asarray(sr.one, a.vals.dtype),
+        jnp.asarray(sr.zero, a.vals.dtype),
+    )
     r = Assoc(a.rows, a.cols, ones, a.nnz, a.overflow)
     base = r
     for _ in range(steps - 1):
-        nxt = assoc.matmul(r, base, cap=cap, max_fanout=max_fanout, sr=MAX_MIN)
-        r = assoc.add(r, nxt, cap=cap, sr=MAX_MIN)
+        nxt = assoc.matmul(r, base, cap=cap, max_fanout=max_fanout, sr=sr)
+        r = assoc.add(r, nxt, cap=cap, sr=sr)
     return r

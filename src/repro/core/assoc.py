@@ -20,6 +20,8 @@ avoid int64: JAX defaults to 32-bit and TPU vector lanes are 32-bit native.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import dataclasses
 import math
 from typing import Tuple
@@ -33,10 +35,71 @@ from .semiring import PLUS_TIMES, Semiring
 PAD = jnp.iinfo(jnp.int32).max  # sentinel key for dead slots (sorts last)
 
 
+@dataclasses.dataclass(frozen=True)
+class OpPolicy:
+    """Cap policy for operator-overloaded Assoc algebra (``A + B``, ``A @ B``…).
+
+    Every Assoc operation needs a static output capacity; the module
+    functions take it explicitly, the operators read it from the active
+    policy (see :func:`cap_policy`).  ``None`` caps mean "derive from the
+    operands": ``add_cap = a.cap + b.cap``, ``mul_cap = min(a.cap, b.cap)``,
+    ``matmul_cap = a.cap + b.cap``, ``row_cap = a.cap``.
+    """
+
+    sr: Semiring = PLUS_TIMES
+    add_cap: int | None = None
+    mul_cap: int | None = None
+    matmul_cap: int | None = None
+    max_fanout: int = 32
+    row_cap: int | None = None
+
+
+_DEFAULT_POLICY = OpPolicy()
+# ContextVar (not a module-global stack): each thread / async task scopes
+# its own policy, so concurrent cap_policy blocks cannot corrupt each other
+_policy_var: contextvars.ContextVar[OpPolicy] = contextvars.ContextVar(
+    "assoc_op_policy", default=_DEFAULT_POLICY
+)
+
+
+def current_policy() -> OpPolicy:
+    """The innermost active :func:`cap_policy`, or the defaults."""
+    return _policy_var.get()
+
+
+@contextlib.contextmanager
+def cap_policy(**overrides):
+    """Scope an :class:`OpPolicy` for operator-overloaded algebra::
+
+        with assoc.cap_policy(matmul_cap=4096, max_fanout=24, sr=MAX_MIN):
+            C = (A @ B) & A
+
+    Overrides stack: nested ``cap_policy`` blocks start from the enclosing
+    policy, not the defaults.
+    """
+    token = _policy_var.set(dataclasses.replace(current_policy(), **overrides))
+    try:
+        yield _policy_var.get()
+    finally:
+        _policy_var.reset(token)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class Assoc:
-    """Sorted-COO hypersparse associative array with static capacity."""
+    """Sorted-COO hypersparse associative array with static capacity.
+
+    Beyond the module functions, Assoc carries the paper's spreadsheet-style
+    operator algebra (Fig. 1 one-liners), reading output capacities and the
+    semiring from the active :func:`cap_policy`:
+
+    * ``A + B``  — element-wise semiring add  (:func:`add`, table union)
+    * ``A & B``  — element-wise semiring mul  (:func:`elem_mul`, intersection)
+    * ``A @ B``  — semiring array multiply    (:func:`matmul`)
+    * ``A.T``    — transpose
+    * ``A[r, :]`` / ``A[:, c]`` / ``A[r, c]`` — row slice / col slice / point query
+    * ``A.topk(k)`` — k heaviest entries (ids, values)
+    """
 
     rows: jax.Array  # int32[cap]
     cols: jax.Array  # int32[cap]
@@ -50,6 +113,73 @@ class Assoc:
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return f"Assoc(cap={self.capacity})"
+
+    # -- operator algebra (delegates to module functions via cap_policy) ----
+    def __add__(self, other: "Assoc") -> "Assoc":
+        p = current_policy()
+        cap = p.add_cap if p.add_cap is not None else self.capacity + other.capacity
+        return add(self, other, cap=cap, sr=p.sr)
+
+    def __and__(self, other: "Assoc") -> "Assoc":
+        p = current_policy()
+        cap = p.mul_cap if p.mul_cap is not None else min(self.capacity, other.capacity)
+        return elem_mul(self, other, cap=cap, sr=p.sr)
+
+    def __matmul__(self, other: "Assoc") -> "Assoc":
+        p = current_policy()
+        cap = (
+            p.matmul_cap
+            if p.matmul_cap is not None
+            else self.capacity + other.capacity
+        )
+        return matmul(self, other, cap=cap, max_fanout=p.max_fanout, sr=p.sr)
+
+    @property
+    def T(self) -> "Assoc":
+        return transpose(self, sr=current_policy().sr)
+
+    def __getitem__(self, key):
+        if not (isinstance(key, tuple) and len(key) == 2):
+            raise TypeError(
+                "Assoc indexing is 2-D: A[r, :], A[:, c], or A[r, c]"
+            )
+        p = current_policy()
+        r, c = key
+        for s in (r, c):
+            if isinstance(s, slice) and s != slice(None):
+                raise TypeError(
+                    "Assoc slicing supports only the full ':' slice "
+                    "(bounded/stepped slices would silently drop keys); use "
+                    "extract_row / elem_mul masks for bounded selections"
+                )
+        r_all = isinstance(r, slice)
+        c_all = isinstance(c, slice)
+        if r_all and c_all:
+            return self
+        if r_all:  # column slice via the transpose, keys stay (row, col)
+            got = extract_row(
+                transpose(self, sr=p.sr), c,
+                cap=p.row_cap if p.row_cap is not None else self.capacity,
+                sr=p.sr,
+            )
+            return transpose(got, sr=p.sr)
+        if c_all:
+            return extract_row(
+                self, r,
+                cap=p.row_cap if p.row_cap is not None else self.capacity,
+                sr=p.sr,
+            )
+        return get(self, r, c, sr=p.sr)
+
+    def topk(self, k: int) -> Tuple[jax.Array, jax.Array]:
+        """The ``k`` largest values: ``(row_ids [k], values [k])``.
+
+        On a degree array (keys ``(vertex, 0)``) this is the paper's
+        heavy-hitters query; dead slots rank ``-inf`` so they never place.
+        """
+        ranked = jnp.where(self.rows != PAD, self.vals, -jnp.inf)
+        top_vals, idx = lax.top_k(ranked, k)
+        return self.rows[idx], top_vals
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,9 @@
 """Distributed hierarchical associative arrays.
 
+NOTE: for the paper-faithful independent-instance design, the public entry
+point is now :class:`repro.d4m.D4MStream` (``StreamConfig(devices=D)``);
+:class:`ParallelHierStream` below is a deprecation shim over it.
+
 Two designs, mirroring the paper and going one step beyond it:
 
 * :class:`ParallelHierStream` — the paper's scaling design (Section V):
@@ -38,13 +42,18 @@ from .semiring import PLUS_TIMES, Semiring
 # ---------------------------------------------------------------------------
 
 class ParallelHierStream:
-    """One independent hierarchical array per device (paper Section V).
+    """DEPRECATED: one independent hierarchical array per device.
 
-    A thin facade over :class:`~repro.core.multistream.MultiStreamEngine`
-    with ``instances_per_device=1`` — the paper-faithful one-instance-per-
-    device reading.  Pass ``instances_per_device=K`` to pack K vmapped
-    instances onto every device (K x D total), which is how the paper's
-    34,000-instance axis is exercised on a single host.
+    Thin shim over the unified session API — construction builds a
+    :class:`repro.d4m.D4MStream` on the given mesh and forwards to its
+    engine.  New code should use the session directly::
+
+        sess = repro.d4m.D4MStream(
+            repro.d4m.StreamConfig(cuts=..., top_capacity=..., batch_size=...,
+                                   devices=D, instances_per_device=K))
+
+    (The functional ``init_state()/update(h, ...)`` surface here maps onto
+    the session's internally-held state + ``update()``.)
     """
 
     def __init__(
@@ -57,15 +66,40 @@ class ParallelHierStream:
         axis_names: Tuple[str, ...] | None = None,
         instances_per_device: int = 1,
     ):
-        self.engine = MultiStreamEngine(
-            mesh,
-            cuts,
-            top_capacity,
-            batch_size,
-            instances_per_device=instances_per_device,
-            sr=sr,
-            axis_names=axis_names,
+        import warnings
+
+        warnings.warn(
+            "ParallelHierStream is deprecated; use repro.d4m.D4MStream "
+            "(the unified session API)",
+            DeprecationWarning,
+            stacklevel=2,
         )
+        if axis_names is not None and tuple(axis_names) != tuple(mesh.axis_names):
+            # sub-axis meshes predate the session API; keep the old direct path
+            self.engine = MultiStreamEngine(
+                mesh,
+                cuts,
+                top_capacity,
+                batch_size,
+                instances_per_device=instances_per_device,
+                sr=sr,
+                axis_names=axis_names,
+            )
+        else:
+            from repro.d4m import D4MStream, StreamConfig
+
+            self.session = D4MStream(
+                StreamConfig(
+                    cuts=tuple(int(c) for c in cuts),
+                    top_capacity=int(top_capacity),
+                    batch_size=int(batch_size),
+                    semiring=sr,
+                    instances_per_device=int(instances_per_device),
+                    engine="mesh",
+                ),
+                mesh=mesh,
+            )
+            self.engine = self.session.engine
         self.mesh = mesh
         self.cuts = self.engine.cuts
         self.sr = sr

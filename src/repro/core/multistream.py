@@ -1,5 +1,11 @@
 """Instance-packed multi-stream engine (paper Section V's scaling axis).
 
+NOTE: this is the *engine layer*.  The public entry point is the unified
+session API — :class:`repro.d4m.D4MStream` with
+``StreamConfig(instances_per_device=K, devices=D)`` — which constructs and
+drives this engine; call it directly only when building new engine-level
+machinery.
+
 The paper's 1.9 B updates/s does not come from one fast array — it comes from
 34,000 *independent* hierarchical D4M instances, each ingesting its own slice
 of the stream with zero update-path communication (see also arXiv:1902.00846).

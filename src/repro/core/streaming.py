@@ -1,32 +1,35 @@
-"""Jitted streaming-update engines over hierarchical associative arrays.
+"""DEPRECATED streaming entry points — thin shims over the D4M session.
 
-Two ingestion paths:
+The canonical streaming engines live in :mod:`repro.d4m.session` (the
+unified session API): :func:`repro.d4m.session.build_update_step`,
+:func:`repro.d4m.session.scan_ingest`, and
+:func:`repro.d4m.session.scan_ingest_and_snapshot`.  New code should go
+through :class:`repro.d4m.D4MStream`; these wrappers keep the historical
+``repro.core.streaming`` names working (bit-identical behavior) while
+emitting a :class:`DeprecationWarning`.
 
-* :func:`make_update_fn` — a jitted single-batch update, used by the
-  benchmarks to measure *per-group* wall-clock rates (the paper inserts
-  groups of 100 K edges and reports instantaneous rate per group, Fig. 4).
-* :func:`ingest_stream` — a ``lax.scan`` over a whole stream held on device,
-  used by tests and by the scaling experiment where per-group host timing
-  would serialize devices.
-
-Both grow an ``instances=K`` path: pass a packed hierarchy (leaves with a
-leading ``[K]`` instance axis, see :mod:`.multistream`) and a ``[K, B]``
-(or ``[T, K, B]`` for the scan) triple stream, and every batch updates all K
-independent instances in one fused vmapped program — the paper's
-instance-scaling axis on a single device.
+Imports are lazy (inside each function) so ``repro.core`` never imports
+``repro.d4m`` at module load — the dependency arrow stays
+``d4m -> core`` except through these explicit shims.
 """
 from __future__ import annotations
 
-import functools
+import warnings
 from typing import Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
-from jax import lax
 
-from . import assoc, hierarchical, multistream
 from .hierarchical import HierAssoc
 from .semiring import PLUS_TIMES, Semiring
+
+
+def _warn(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.streaming.{old} is deprecated; use {new} "
+        f"(see repro.d4m — the unified session API)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 def make_update_fn(
@@ -35,35 +38,11 @@ def make_update_fn(
     donate: bool = True,
     instances: int | None = None,
 ):
-    """A jitted ``(h, rows, cols, vals) -> h`` single-batch update.
+    """Deprecated alias of :func:`repro.d4m.session.build_update_step`."""
+    _warn("make_update_fn", "repro.d4m.session.build_update_step")
+    from repro.d4m import session as _session
 
-    The hierarchy argument is donated so layer buffers are updated in place —
-    on TPU this is what keeps layer 1 resident in fast memory; donation is
-    just as load-bearing for the packed path, whose stacked buffers are K
-    times larger.
-
-    With ``instances=K`` the returned function updates a packed K-instance
-    hierarchy from ``[K, B]`` triple batches (each instance cascades
-    independently via the branchless masked cascade).
-    """
-    cuts = tuple(int(c) for c in cuts)
-
-    if instances is None:
-
-        def step(h: HierAssoc, rows, cols, vals) -> HierAssoc:
-            return hierarchical.update_triples(h, rows, cols, vals, cuts, sr)
-
-    else:
-        k = int(instances)
-
-        def step(h: HierAssoc, rows, cols, vals) -> HierAssoc:
-            if rows.shape[0] != k:
-                raise ValueError(
-                    f"expected [{k}, B] instance-major triples, got {rows.shape}"
-                )
-            return multistream.packed_update(h, rows, cols, vals, cuts, sr)
-
-    return jax.jit(step, donate_argnums=(0,) if donate else ())
+    return _session.build_update_step(cuts, sr=sr, donate=donate, instances=instances)
 
 
 def ingest_stream(
@@ -75,38 +54,13 @@ def ingest_stream(
     sr: Semiring = PLUS_TIMES,
     instances: int | None = None,
 ) -> Tuple[HierAssoc, jax.Array]:
-    """Scan a stream of triple batches into the hierarchy.
+    """Deprecated alias of :func:`repro.d4m.session.scan_ingest`."""
+    _warn("ingest_stream", "repro.d4m.session.scan_ingest")
+    from repro.d4m import session as _session
 
-    Returns the final hierarchy and the per-step total-nnz trace (telemetry
-    mirroring the paper's nnz-vs-updates plot, Fig. 3).  With ``instances=K``
-    the stream is ``[T, K, B]``, ``h`` is a packed K-instance hierarchy, and
-    the trace is the per-step *per-instance* nnz, shape ``[T, K]``.
-    """
-    cuts = tuple(int(c) for c in cuts)
-
-    if instances is None:
-
-        def body(carry: HierAssoc, batch):
-            r, c, v = batch
-            nxt = hierarchical.update_triples(carry, r, c, v, cuts, sr)
-            return nxt, hierarchical.nnz_total(nxt)
-
-    else:
-        if rows.ndim != 3 or rows.shape[1] != int(instances):
-            raise ValueError(
-                f"expected [T, {int(instances)}, B] instance-major stream, "
-                f"got {rows.shape}"
-            )
-
-        def body(carry: HierAssoc, batch):
-            r, c, v = batch
-            nxt = multistream.packed_update(carry, r, c, v, cuts, sr)
-            return nxt, multistream.nnz_per_instance(nxt)
-
-    return lax.scan(body, h, (rows, cols, vals))
+    return _session.scan_ingest(h, rows, cols, vals, cuts, sr, instances=instances)
 
 
-@functools.partial(jax.jit, static_argnames=("cuts", "sr", "cap"))
 def ingest_and_snapshot(
     h: HierAssoc,
     rows: jax.Array,
@@ -115,8 +69,18 @@ def ingest_and_snapshot(
     cuts: Tuple[int, ...],
     cap: int,
     sr: Semiring = PLUS_TIMES,
+    instances: int | None = None,
 ):
-    """Stream ingest followed by a full snapshot (analysis handoff point)."""
-    h2, trace = ingest_stream(h, rows, cols, vals, cuts, sr)
-    snap = hierarchical.snapshot(h2, cap=cap, sr=sr)
-    return h2, snap, trace
+    """Deprecated alias of :func:`repro.d4m.session.scan_ingest_and_snapshot`.
+
+    Now supports the ``instances=K`` packed path (``[T, K, B]`` streams into
+    a packed hierarchy; the snapshot is the merged global array) — routed
+    through the session internals.
+    """
+    _warn("ingest_and_snapshot", "repro.d4m.session.scan_ingest_and_snapshot")
+    from repro.d4m import session as _session
+
+    return _session.scan_ingest_and_snapshot(
+        h, rows, cols, vals, tuple(int(c) for c in cuts), int(cap), sr,
+        instances=instances,
+    )

@@ -1,0 +1,78 @@
+"""``repro.d4m`` — the unified D4M session API.
+
+One import gives the whole paper workflow:
+
+* :class:`StreamConfig` / :class:`CapacityPlan` — validated session config
+  with a capacity planner (telescoped layer caps + memory footprint);
+* :class:`D4MStream` — the streaming session facade (auto engine selection
+  across ``lax.cond`` / vmap-packed / ``shard_map`` mesh, ``update`` /
+  ``ingest`` / ``snapshot`` / ``telemetry`` / ``checkpoint`` / ``query``);
+* operator-overloaded :class:`Assoc` algebra under :func:`cap_policy`;
+* the semiring registry re-exported for convenience.
+
+Quick start (the paper's Fig. 1 / Section III workflow)::
+
+    from repro import d4m
+
+    cfg = d4m.StreamConfig(cuts=(1024, 8192), top_capacity=200_000,
+                           batch_size=512)
+    sess = d4m.D4MStream(cfg)
+    for rows, cols, vals in edge_groups:
+        sess.update(rows, cols, vals)
+    A = sess.snapshot()
+    neighbours = A[some_vertex, :]
+    ids, counts = sess.query.top_k(5)
+"""
+from repro.core.semiring import (  # noqa: F401  (re-exported registry)
+    COUNT,
+    FIRST,
+    MAX_MIN,
+    MAX_PLUS,
+    MAX_TIMES,
+    MIN_MAX,
+    MIN_PLUS,
+    MIN_TIMES,
+    PLUS_TIMES,
+    REGISTRY,
+    Semiring,
+)
+
+from repro.core.assoc import PAD, empty, from_triples  # noqa: F401
+
+from .algebra import Assoc, OpPolicy, cap_policy, current_policy
+from .config import CapacityPlan, StreamConfig
+from .session import (
+    D4MStream,
+    QueryNamespace,
+    build_update_step,
+    scan_ingest,
+    scan_ingest_and_snapshot,
+)
+
+__all__ = [
+    "Assoc",
+    "CapacityPlan",
+    "PAD",
+    "empty",
+    "from_triples",
+    "D4MStream",
+    "OpPolicy",
+    "QueryNamespace",
+    "Semiring",
+    "StreamConfig",
+    "build_update_step",
+    "cap_policy",
+    "current_policy",
+    "scan_ingest",
+    "scan_ingest_and_snapshot",
+    "PLUS_TIMES",
+    "MAX_PLUS",
+    "MIN_PLUS",
+    "MAX_TIMES",
+    "MIN_TIMES",
+    "MAX_MIN",
+    "MIN_MAX",
+    "FIRST",
+    "COUNT",
+    "REGISTRY",
+]

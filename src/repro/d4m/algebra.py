@@ -1,0 +1,28 @@
+"""Operator-overloaded Assoc algebra — the paper's Fig. 1 one-liners.
+
+The operators live on :class:`repro.core.assoc.Assoc` itself and delegate to
+the module functions (:func:`repro.core.assoc.add`, ``elem_mul``, ``matmul``,
+``transpose``, ``extract_row``, ``get``); this module is the user-facing
+surface: the :func:`cap_policy` scope that supplies the static output
+capacities, the semiring, and the spGEMM fanout bound every operator needs::
+
+    from repro.d4m import cap_policy, MAX_MIN
+
+    C = A + B                 # element-wise semiring add   (table union)
+    I = A & B                 # element-wise semiring mul   (intersection)
+    with cap_policy(matmul_cap=1 << 14, max_fanout=24):
+        sq = A @ A.T          # semiring spGEMM
+    row = A[src_ip, :]        # Fig. 1: nearest neighbours of a vertex
+    ids, counts = (A + A.T).topk(10)   # heavy hitters
+
+Why a policy and not inference: XLA static shapes make every output
+capacity a compile-time constant, so *some* explicit contract must exist.
+The policy keeps the algebra readable (operators carry no kwargs) while the
+contract stays visible and scoped — exactly the trade-off documented in
+DESIGN.md for the module functions, lifted to operator syntax.
+"""
+from __future__ import annotations
+
+from repro.core.assoc import Assoc, OpPolicy, cap_policy, current_policy
+
+__all__ = ["Assoc", "OpPolicy", "cap_policy", "current_policy"]

@@ -1,0 +1,210 @@
+"""Validated configuration + capacity planning for a D4M streaming session.
+
+One :class:`StreamConfig` captures everything the five lower-level modules
+used to take separately — cut schedule, telescoped capacities, batch size,
+semiring, dtype, instance packing (K per device) and device count (D) — and
+:meth:`StreamConfig.plan` resolves it into a :class:`CapacityPlan`: the
+exact per-layer capacities :func:`repro.core.hierarchical.init` will
+allocate, the per-layer / per-instance / total memory footprint (the paper's
+Fig. 3 trade-off, computable before any device allocation), and the derived
+snapshot / query capacities every analysis call defaults to.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import semiring as semiring_mod
+from repro.core.hierarchical import geometric_cuts
+from repro.core.semiring import Semiring
+
+ENGINES = ("auto", "single", "packed", "mesh")
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Everything a :class:`~repro.d4m.session.D4MStream` needs, validated.
+
+    Cut schedule: pass ``cuts`` explicitly, or a geometric schedule via
+    ``c1``/``cut_ratio``/``n_layers`` (the paper's ``c_i = c1 * ratio^(i-1)``,
+    Fig. 3).  ``cuts=()`` is the flat, non-hierarchical baseline.
+
+    Scaling axes: ``instances_per_device`` (K, vmap-packed) and ``devices``
+    (D, ``shard_map``; ``None`` means all available).  ``engine`` is normally
+    ``"auto"`` — ``lax.cond`` cascade at K=1 on one device, branchless
+    vmapped pack at K>1, mesh engine at D>1 — but can force a specific path
+    (benchmarks force ``"mesh"`` so every sweep point runs the same program).
+    """
+
+    top_capacity: int
+    batch_size: int
+    cuts: Tuple[int, ...] | None = None
+    c1: int | None = None
+    cut_ratio: int = 8
+    n_layers: int | None = None
+    semiring: str | Semiring = "plus.times"
+    dtype: Any = "float32"
+    instances_per_device: int = 1
+    devices: int | None = 1
+    axis_name: str = "data"
+    engine: str = "auto"
+    branchless: bool | None = None
+    snapshot_cap: int | None = None
+    max_fanout: int = 32
+    seed: int = 0
+
+    # -- resolution helpers -------------------------------------------------
+    @property
+    def sr(self) -> Semiring:
+        if isinstance(self.semiring, Semiring):
+            return self.semiring
+        return semiring_mod.get(self.semiring)
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def resolved_cuts(self) -> Tuple[int, ...]:
+        if self.cuts is not None:
+            return tuple(int(c) for c in self.cuts)
+        if self.c1 is None or self.n_layers is None:
+            raise ValueError(
+                "StreamConfig needs either explicit cuts=... or a geometric "
+                "schedule via c1=, cut_ratio=, n_layers="
+            )
+        return geometric_cuts(self.c1, self.cut_ratio, self.n_layers)
+
+    def resolved_devices(self) -> int:
+        if self.devices is None:
+            import jax
+
+            return len(jax.devices())
+        return int(self.devices)
+
+    def validate(self) -> "StreamConfig":
+        cuts = self.resolved_cuts()
+        if any(c <= 0 for c in cuts):
+            raise ValueError(f"cuts must be positive, got {cuts}")
+        if any(b <= a for a, b in zip(cuts, cuts[1:])):
+            raise ValueError(f"cuts must be strictly increasing, got {cuts}")
+        if self.top_capacity <= 0:
+            raise ValueError(f"top_capacity must be positive, got {self.top_capacity}")
+        if self.batch_size <= 0:
+            raise ValueError(f"batch_size must be positive, got {self.batch_size}")
+        if self.instances_per_device < 1:
+            raise ValueError(
+                f"instances_per_device must be >= 1, got {self.instances_per_device}"
+            )
+        d = self.resolved_devices()
+        if d < 1:
+            raise ValueError(f"devices must be >= 1, got {d}")
+        if self.engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, got {self.engine!r}")
+        k = self.instances_per_device
+        if self.engine == "single" and (k != 1 or d != 1):
+            raise ValueError(
+                f"engine='single' requires instances_per_device=1 and devices=1, "
+                f"got K={k}, D={d}"
+            )
+        if self.engine == "packed" and d != 1:
+            raise ValueError(f"engine='packed' requires devices=1, got D={d}")
+        if self.max_fanout < 1:
+            raise ValueError(f"max_fanout must be >= 1, got {self.max_fanout}")
+        self.sr  # raises KeyError on an unknown semiring name
+        return self
+
+    def resolved_engine(self) -> str:
+        """The engine ``"auto"`` resolves to (cond / vmap pack / shard_map)."""
+        self.validate()
+        if self.engine != "auto":
+            return self.engine
+        if self.resolved_devices() > 1:
+            return "mesh"
+        if self.instances_per_device > 1:
+            return "packed"
+        return "single"
+
+    # -- capacity planning ---------------------------------------------------
+    def plan(self) -> "CapacityPlan":
+        """Telescope the layer capacities and report the memory footprint.
+
+        Mirrors :func:`repro.core.hierarchical.init` exactly (cap_1 = c_1 +
+        batch, cap_i = c_i + cap_{i-1}, cap_N = top + cap_{N-1}) so the plan
+        is the authoritative preview of what the session will allocate.
+        """
+        self.validate()
+        cuts = self.resolved_cuts()
+        caps = []
+        below = int(self.batch_size)
+        for c in cuts:
+            caps.append(int(c) + below)
+            below = caps[-1]
+        caps.append(int(self.top_capacity) + below)
+        itemsize = self.jnp_dtype.itemsize
+        bytes_per_layer = tuple(cap * (4 + 4 + itemsize) for cap in caps)
+        n_instances = self.instances_per_device * self.resolved_devices()
+        per_instance = sum(bytes_per_layer)
+        # default global-snapshot bound: every instance can hold up to its
+        # full layer-cap sum of distinct keys, and hash routing makes the
+        # key sets disjoint — so the safe global cap scales with instances.
+        # Override with snapshot_cap= when the true distinct-key count is
+        # known (it usually is: the paper sizes top_capacity that way).
+        snap = (
+            int(self.snapshot_cap)
+            if self.snapshot_cap is not None
+            else sum(caps) * n_instances
+        )
+        return CapacityPlan(
+            cuts=cuts,
+            layer_caps=tuple(caps),
+            bytes_per_layer=bytes_per_layer,
+            bytes_per_instance=per_instance,
+            n_instances=n_instances,
+            total_bytes=per_instance * n_instances,
+            snapshot_cap=snap,
+            batch_size=int(self.batch_size),
+            max_fanout=int(self.max_fanout),
+            dtype_itemsize=itemsize,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityPlan:
+    """Resolved static-shape contract of a session (see StreamConfig.plan)."""
+
+    cuts: Tuple[int, ...]
+    layer_caps: Tuple[int, ...]
+    bytes_per_layer: Tuple[int, ...]
+    bytes_per_instance: int
+    n_instances: int
+    total_bytes: int
+    snapshot_cap: int
+    batch_size: int
+    max_fanout: int
+    dtype_itemsize: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layer_caps)
+
+    def describe(self) -> str:
+        """Human-readable capacity/memory table (the Fig. 3 trade-off)."""
+        lines = [
+            f"D4M capacity plan: {self.n_layers} layers, "
+            f"{self.n_instances} instance(s), batch {self.batch_size}",
+        ]
+        for i, cap in enumerate(self.layer_caps):
+            cut = self.cuts[i] if i < len(self.cuts) else None
+            role = f"cut={cut}" if cut is not None else "top"
+            lines.append(
+                f"  layer {i + 1}: cap={cap:>12,}  {role:<16} "
+                f"{self.bytes_per_layer[i] / 1e6:10.2f} MB"
+            )
+        lines.append(
+            f"  per-instance {self.bytes_per_instance / 1e6:.2f} MB, total "
+            f"{self.total_bytes / 1e6:.2f} MB across {self.n_instances} instance(s); "
+            f"snapshot cap {self.snapshot_cap:,}"
+        )
+        return "\n".join(lines)

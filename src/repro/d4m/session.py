@@ -1,0 +1,579 @@
+"""The unified D4M streaming session: one entry point, three engines.
+
+:class:`D4MStream` is the facade the paper's Fig. 1 workflow reads through:
+construct it from a validated :class:`~repro.d4m.config.StreamConfig`, feed
+triples with :meth:`~D4MStream.update` / :meth:`~D4MStream.ingest`, and
+analyse through :meth:`~D4MStream.snapshot` and the bound
+:attr:`~D4MStream.query` namespace.  The session picks the right engine
+automatically:
+
+* ``single`` — K=1 on one device: the ``lax.cond`` cascade
+  (:func:`repro.core.hierarchical.update_triples`), which only pays for
+  layer merges when a cut actually fires;
+* ``packed`` — K>1 on one device: the branchless vmapped cascade
+  (:func:`repro.core.multistream.packed_update`), K independent instances
+  in one fused program;
+* ``mesh`` — D>1: :class:`repro.core.multistream.MultiStreamEngine`
+  (``shard_map``; K x D instances, zero update-path collectives).
+
+This module also holds the *canonical* step builders the legacy
+:mod:`repro.core.streaming` entry points now shim onto:
+:func:`build_update_step`, :func:`scan_ingest`, and
+:func:`scan_ingest_and_snapshot`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import analytics, assoc, hierarchical, multistream
+from repro.core.assoc import Assoc
+from repro.core.hierarchical import HierAssoc
+from repro.core.multistream import MultiStreamEngine
+from repro.core.semiring import PLUS_TIMES, Semiring
+
+from .config import CapacityPlan, StreamConfig
+
+
+# ---------------------------------------------------------------------------
+# canonical step builders (the session's internals; legacy streaming.* shims
+# delegate here)
+# ---------------------------------------------------------------------------
+
+def build_update_step(
+    cuts: Sequence[int],
+    sr: Semiring = PLUS_TIMES,
+    donate: bool = True,
+    instances: int | None = None,
+):
+    """A jitted ``(h, rows, cols, vals) -> h`` single-batch update.
+
+    The hierarchy argument is donated so layer buffers are updated in place —
+    on TPU this is what keeps layer 1 resident in fast memory; donation is
+    just as load-bearing for the packed path, whose stacked buffers are K
+    times larger.
+
+    With ``instances=K`` the returned function updates a packed K-instance
+    hierarchy from ``[K, B]`` triple batches (each instance cascades
+    independently via the branchless masked cascade).
+    """
+    cuts = tuple(int(c) for c in cuts)
+
+    if instances is None:
+
+        def step(h: HierAssoc, rows, cols, vals) -> HierAssoc:
+            return hierarchical.update_triples(h, rows, cols, vals, cuts, sr)
+
+    else:
+        k = int(instances)
+
+        def step(h: HierAssoc, rows, cols, vals) -> HierAssoc:
+            if rows.shape[0] != k:
+                raise ValueError(
+                    f"expected [{k}, B] instance-major triples, got {rows.shape}"
+                )
+            return multistream.packed_update(h, rows, cols, vals, cuts, sr)
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def scan_ingest(
+    h: HierAssoc,
+    rows: jax.Array,  # [T, B] int32, or [T, K, B] when instances=K
+    cols: jax.Array,
+    vals: jax.Array,
+    cuts: Sequence[int],
+    sr: Semiring = PLUS_TIMES,
+    instances: int | None = None,
+    branchless: bool | None = None,
+) -> Tuple[HierAssoc, jax.Array]:
+    """``lax.scan`` a stream of triple batches into the hierarchy.
+
+    Returns the final hierarchy and the per-step total-nnz trace (telemetry
+    mirroring the paper's nnz-vs-updates plot, Fig. 3).  With ``instances=K``
+    the stream is ``[T, K, B]``, ``h`` is a packed K-instance hierarchy, and
+    the trace is the per-step *per-instance* nnz, shape ``[T, K]``.
+    ``branchless`` forces the masked cascade (see
+    :func:`repro.core.hierarchical.update`); ``None`` keeps each path's
+    default (cond single-instance, auto for the pack).
+    """
+    cuts = tuple(int(c) for c in cuts)
+
+    if instances is None:
+
+        def body(carry: HierAssoc, batch):
+            r, c, v = batch
+            nxt = hierarchical.update_triples(
+                carry, r, c, v, cuts, sr, branchless=bool(branchless)
+            )
+            return nxt, hierarchical.nnz_total(nxt)
+
+    else:
+        if rows.ndim != 3 or rows.shape[1] != int(instances):
+            raise ValueError(
+                f"expected [T, {int(instances)}, B] instance-major stream, "
+                f"got {rows.shape}"
+            )
+
+        def body(carry: HierAssoc, batch):
+            r, c, v = batch
+            nxt = multistream.packed_update(
+                carry, r, c, v, cuts, sr, branchless=branchless
+            )
+            return nxt, multistream.nnz_per_instance(nxt)
+
+    return lax.scan(body, h, (rows, cols, vals))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cuts", "sr", "cap", "instances")
+)
+def scan_ingest_and_snapshot(
+    h: HierAssoc,
+    rows: jax.Array,
+    cols: jax.Array,
+    vals: jax.Array,
+    cuts: Tuple[int, ...],
+    cap: int,
+    sr: Semiring = PLUS_TIMES,
+    instances: int | None = None,
+):
+    """Stream ingest followed by a full snapshot (analysis handoff point).
+
+    With ``instances=K`` the stream is ``[T, K, B]`` into a packed hierarchy
+    and the returned snapshot is the *global* array — the semiring sum of all
+    K per-instance snapshots (hash routing makes that a disjoint union).
+    """
+    h2, trace = scan_ingest(h, rows, cols, vals, cuts, sr, instances=instances)
+    if instances is None:
+        snap = hierarchical.snapshot(h2, cap=cap, sr=sr)
+    else:
+        per = multistream.snapshot_packed(h2, cap=cap, sr=sr)
+        snap = multistream.merge_snapshots(per, cap=cap, sr=sr)
+    return h2, snap, trace
+
+
+# ---------------------------------------------------------------------------
+# the query namespace: analytics with caps auto-derived from the plan
+# ---------------------------------------------------------------------------
+
+class QueryNamespace:
+    """Bound analytics over the session's current snapshot.
+
+    Every method snapshots lazily (cached until the next update) and fills
+    capacity arguments from the session's :class:`CapacityPlan`, so the
+    paper's analyses are one-liners: ``sess.query.top_k(10)``,
+    ``sess.query.triangles()``, ``sess.query.jaccard(u, v)``.
+    """
+
+    def __init__(self, session: "D4MStream"):
+        self._s = session
+
+    def _snap(self) -> Assoc:
+        return self._s.snapshot()
+
+    def _cap(self, cap: int | None) -> int:
+        return int(cap) if cap is not None else self._s.plan.snapshot_cap
+
+    def degrees(self, cap: int | None = None) -> Tuple[Assoc, Assoc]:
+        """(out_degree, in_degree) keyed ``(vertex, 0)``, folded with the
+        session semiring's add."""
+        return analytics.degrees(self._snap(), cap=self._cap(cap), sr=self._s.sr)
+
+    def top_k(self, k: int = 10, by: str = "out") -> Tuple[jax.Array, jax.Array]:
+        """Heaviest-k vertices by out/in degree: ``(ids [k], counts [k])``."""
+        s = self._s
+        reduce = assoc.reduce_rows if by == "out" else assoc.reduce_cols
+        deg = reduce(self._snap(), s.plan.snapshot_cap, s.sr)
+        return analytics.top_k_vertices(deg, k)
+
+    def triangles(
+        self, cap_sq: int | None = None, max_fanout: int | None = None
+    ) -> jax.Array:
+        """Triangle count of the undirected support (tr(A^3)/6).
+
+        A *count*, so it is always computed over the boolean support under
+        plus.times, whatever semiring the session streams under (e.g. a
+        max.plus session's sr.one = 0.0 would annihilate every product).
+        """
+        und = analytics.undirected_view(
+            self._snap(), cap=2 * self._s.plan.snapshot_cap, sr=PLUS_TIMES
+        )
+        return analytics.triangle_count(
+            und,
+            cap_sq=cap_sq if cap_sq is not None else 4 * self._s.plan.snapshot_cap,
+            max_fanout=max_fanout if max_fanout is not None else self._s.plan.max_fanout,
+        )
+
+    def common_neighbors(self, u: int, v: int, cap: int | None = None) -> jax.Array:
+        return analytics.common_neighbors(self._snap(), u, v, cap=self._cap(cap))
+
+    def jaccard(self, u: int, v: int, cap: int | None = None) -> jax.Array:
+        return analytics.jaccard(self._snap(), u, v, cap=self._cap(cap))
+
+    def reachable_within(
+        self, steps: int, cap: int | None = None, max_fanout: int | None = None
+    ) -> Assoc:
+        return analytics.reachable_within(
+            self._snap(),
+            steps,
+            cap=self._cap(cap),
+            max_fanout=max_fanout if max_fanout is not None else self._s.plan.max_fanout,
+        )
+
+    def row(self, r: int, cap: int | None = None) -> Assoc:
+        """Row slice ``A(r, :)`` — Fig. 1's nearest-neighbours query."""
+        return assoc.extract_row(self._snap(), r, cap=self._cap(cap), sr=self._s.sr)
+
+    def get(self, r, c) -> jax.Array:
+        """Point query ``A(r, c)``."""
+        return assoc.get(self._snap(), r, c, sr=self._s.sr)
+
+
+# ---------------------------------------------------------------------------
+# the session facade
+# ---------------------------------------------------------------------------
+
+class D4MStream:
+    """One streaming D4M session over the engine the config calls for.
+
+    State lives inside the session (donated on every update, so the layer
+    buffers are reused in place); :meth:`snapshot` / :attr:`query` are the
+    read side.  See the module docstring for the engine-selection rules.
+    """
+
+    def __init__(
+        self,
+        config: StreamConfig,
+        *,
+        mesh: Mesh | None = None,
+        checkpoint_dir: str | None = None,
+        checkpoint_keep: int = 3,
+    ):
+        config.validate()
+        if mesh is not None:
+            # an explicit mesh pins the device axis: fold it into the config
+            # so plan()/telemetry report the true instance count
+            n_mesh = 1
+            for a in mesh.axis_names:
+                n_mesh *= mesh.shape[a]
+            config = dataclasses.replace(config, devices=n_mesh, engine="mesh")
+        self.config = config
+        self.plan: CapacityPlan = config.plan()
+        self.cuts = config.resolved_cuts()
+        self.sr = config.sr
+        self.dtype = config.jnp_dtype
+        self.batch_size = int(config.batch_size)
+        self.k_per_device = int(config.instances_per_device)
+        self._ckpt_dir = checkpoint_dir
+        self._ckpt_keep = checkpoint_keep
+        self._mgr = None
+        self._snap_cache: Dict[Tuple[int, bool], Assoc] = {}
+        self._query: Optional[QueryNamespace] = None
+
+        if mesh is not None:
+            self.kind = "mesh"
+            self.mesh = mesh
+        else:
+            self.kind = config.resolved_engine()
+            self.mesh = None
+            if self.kind == "mesh":
+                d = config.resolved_devices()
+                devs = jax.devices()
+                if d > len(devs):
+                    raise ValueError(
+                        f"config asks for {d} devices but only {len(devs)} are "
+                        f"available (force more with XLA_FLAGS="
+                        f"--xla_force_host_platform_device_count=N)"
+                    )
+                self.mesh = Mesh(
+                    np.asarray(devs[:d]).reshape(d), (config.axis_name,)
+                )
+
+        if self.kind == "mesh":
+            self.engine = MultiStreamEngine(
+                self.mesh,
+                self.cuts,
+                top_capacity=config.top_capacity,
+                batch_size=self.batch_size,
+                instances_per_device=self.k_per_device,
+                sr=self.sr,
+                dtype=self.dtype,
+                branchless=config.branchless,
+            )
+            self.n_instances = self.engine.n_instances
+            self._step = self.engine.update
+        elif self.kind == "packed":
+            self.engine = None
+            self.n_instances = self.k_per_device
+            k = self.n_instances
+            cuts, sr, branchless = self.cuts, self.sr, config.branchless
+
+            def _packed(h, rows, cols, vals):
+                return multistream.packed_update(
+                    h, rows, cols, vals, cuts, sr, branchless=branchless
+                )
+
+            self._step = jax.jit(_packed, donate_argnums=(0,))
+            self._route = jax.jit(
+                lambda r, c, v: multistream.route_to_instances(
+                    r, c, v, k, self.batch_size, sr
+                )
+            )
+        else:  # single
+            self.engine = None
+            self.n_instances = 1
+            cuts, sr = self.cuts, self.sr
+            branchless = bool(config.branchless)
+
+            def _single(h, rows, cols, vals):
+                return hierarchical.update_triples(
+                    h, rows, cols, vals, cuts, sr, branchless=branchless
+                )
+
+            self._step = jax.jit(_single, donate_argnums=(0,))
+
+        self._state: Optional[HierAssoc] = None  # allocated lazily
+
+    # -- lifecycle -----------------------------------------------------------
+    @property
+    def state(self) -> HierAssoc:
+        """The live hierarchy pytree (allocated on first touch)."""
+        if self._state is None:
+            self._state = self._init_state()
+        return self._state
+
+    @state.setter
+    def state(self, value: HierAssoc) -> None:
+        self._state = value
+    def _init_state(self) -> HierAssoc:
+        if self.kind == "mesh":
+            return self.engine.init_state()
+        if self.kind == "packed":
+            return multistream.init_packed(
+                self.n_instances,
+                self.cuts,
+                top_capacity=self.config.top_capacity,
+                batch_size=self.batch_size,
+                sr=self.sr,
+                dtype=self.dtype,
+            )
+        return hierarchical.init(
+            self.cuts,
+            top_capacity=self.config.top_capacity,
+            batch_size=self.batch_size,
+            sr=self.sr,
+            dtype=self.dtype,
+        )
+
+    def reset(self) -> "D4MStream":
+        """Fresh empty state (same compiled update functions)."""
+        self.state = self._init_state()
+        self._snap_cache.clear()
+        return self
+
+    @property
+    def raw_update(self):
+        """The jitted, state-donating ``(h, rows, cols, vals) -> h`` step —
+        for benchmarks that need ``.lower()``/HLO inspection."""
+        return self._step
+
+    # -- write side ----------------------------------------------------------
+    def update(self, rows, cols, vals) -> "D4MStream":
+        """One pre-shaped batch: ``[B]`` (single), ``[K, B]`` (packed), or
+        ``[K*D, B]`` instance-major (mesh; see :meth:`shard_stream`).
+
+        State is donated — the previous ``self.state`` buffers are consumed.
+        """
+        self.state = self._step(self.state, rows, cols, vals)
+        self._snap_cache.clear()
+        return self
+
+    def ingest(self, rows, cols, vals):
+        """One *flat global* triple batch ``[B]``: hash-route to every
+        instance, then update.  Returns the dropped-triple count (always 0
+        for the single-instance engine; routing back pressure otherwise).
+        """
+        if self.kind == "single":
+            self.update(rows, cols, vals)
+            return jnp.zeros((), jnp.int32)
+        if self.kind == "packed":
+            br, bc, bv, dropped = self._route(rows, cols, vals)
+            self.update(br, bc, bv)
+            return dropped
+        self.state, dropped = self.engine.ingest(self.state, rows, cols, vals)
+        self._snap_cache.clear()
+        return dropped
+
+    def ingest_stream(self, rows, cols, vals) -> jax.Array:
+        """Scan a whole on-device stream: ``[T, B]`` (single) or
+        ``[T, K, B]`` pre-routed (packed).  Returns the per-step nnz
+        trace (``[T]`` or ``[T, K]``).
+
+        Not offered on the mesh engine: its verified program is the
+        per-batch ``shard_map`` update (zero collectives) — scan there with
+        a loop over :meth:`update`.
+        """
+        if self.kind == "mesh":
+            raise NotImplementedError(
+                "ingest_stream is not available on the mesh engine; loop "
+                "over update() so every step runs the verified shard_map "
+                "program"
+            )
+        instances = None if self.kind == "single" else self.n_instances
+        self.state, trace = scan_ingest(
+            self.state, rows, cols, vals, self.cuts, self.sr,
+            instances=instances, branchless=self.config.branchless,
+        )
+        self._snap_cache.clear()
+        return trace
+
+    def shard_stream(self, rows, cols, vals):
+        """Place pre-split ``[n_instances, B]`` triples instance-major
+        (mesh engine; identity elsewhere)."""
+        if self.kind == "mesh":
+            return self.engine.shard_stream(rows, cols, vals)
+        return rows, cols, vals
+
+    def route(self, rows, cols, vals):
+        """Hash-split a flat global batch into per-instance sub-batches
+        without updating (``(rows, cols, vals, dropped)``)."""
+        if self.kind == "single":
+            return rows, cols, vals, jnp.zeros((), jnp.int32)
+        if self.kind == "packed":
+            return self._route(rows, cols, vals)
+        return self.engine.route(rows, cols, vals)
+
+    # -- read side -----------------------------------------------------------
+    def snapshot(self, cap: int | None = None, per_instance: bool = False) -> Assoc:
+        """Materialize ``A = sum_i A_i``.
+
+        Global by default (for multi-instance engines: the semiring sum of
+        every instance snapshot — a disjoint union under hash routing);
+        ``per_instance=True`` returns the ``[n_instances]``-leading stack.
+        ``cap`` defaults to the plan's ``snapshot_cap``.
+        """
+        cap = int(cap) if cap is not None else self.plan.snapshot_cap
+        key = (cap, per_instance)
+        if key in self._snap_cache:
+            return self._snap_cache[key]
+        if self.kind == "single":
+            if per_instance:
+                raise ValueError("single-instance session has no per-instance axis")
+            snap = hierarchical.snapshot(self.state, cap=cap, sr=self.sr)
+        elif self.kind == "packed":
+            snap = multistream.snapshot_packed(self.state, cap=cap, sr=self.sr)
+            if not per_instance:
+                snap = multistream.merge_snapshots(snap, cap=cap, sr=self.sr)
+        else:
+            snap = (
+                self.engine.snapshot(self.state, cap)
+                if per_instance
+                else self.engine.snapshot_global(self.state, cap)
+            )
+        if not per_instance and bool(snap.overflow) and not self.overflowed():
+            # the *state* fit but the snapshot cap did not: entries were
+            # dropped while materializing — never let that pass silently
+            import warnings
+
+            warnings.warn(
+                f"snapshot(cap={cap}) truncated the merged array "
+                f"(overflow flag set); raise snapshot_cap in StreamConfig "
+                f"or pass cap= explicitly",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+        self._snap_cache[key] = snap
+        return snap
+
+    def nnz(self) -> int:
+        """Total distinct-key upper bound across all instances."""
+        if self.kind == "single":
+            return int(hierarchical.nnz_total(self.state))
+        return int(multistream.nnz_total(self.state))
+
+    def overflowed(self) -> bool:
+        """Sticky: any instance exceeded a static capacity somewhere."""
+        if self.kind == "single":
+            return bool(hierarchical.overflowed(self.state))
+        return bool(multistream.overflowed_per_instance(self.state).any())
+
+    def telemetry(self) -> Dict[str, Any]:
+        """Host-side counters for dashboards/benchmarks."""
+        base = {
+            "engine": self.kind,
+            "n_instances": self.n_instances,
+            "instances_per_device": self.k_per_device,
+            "nnz_total": self.nnz(),
+            "overflowed": self.overflowed(),
+            "state_bytes": self.plan.total_bytes,
+        }
+        if self.kind == "single":
+            base["nnz_per_layer"] = [int(l.nnz) for l in self.state.layers]
+            base["cascades"] = np.asarray(self.state.cascades)
+        else:
+            base["nnz_per_instance"] = np.asarray(
+                multistream.nnz_per_instance(self.state)
+            )
+            base["cascades_per_instance"] = np.asarray(self.state.cascades)
+            base["overflowed_per_instance"] = np.asarray(
+                multistream.overflowed_per_instance(self.state)
+            )
+        return base
+
+    @property
+    def query(self) -> QueryNamespace:
+        if self._query is None:
+            self._query = QueryNamespace(self)
+        return self._query
+
+    # -- fault tolerance (wires checkpoint.manager) --------------------------
+    def _manager(self):
+        if self._ckpt_dir is None:
+            raise ValueError(
+                "session has no checkpoint_dir; pass checkpoint_dir= to D4MStream"
+            )
+        if self._mgr is None:
+            from repro.checkpoint.manager import CheckpointManager
+
+            self._mgr = CheckpointManager(self._ckpt_dir, keep=self._ckpt_keep)
+        return self._mgr
+
+    def checkpoint(self, step: int, extra: Dict[str, Any] | None = None) -> None:
+        """Async atomic save of the full hierarchy state (+ stream cursor
+        metadata in ``extra``); overlaps serialization with compute."""
+        self._manager().save_async(step, self.state, extra=extra)
+
+    def wait_checkpoint(self) -> None:
+        self._manager().wait()
+
+    def restore(self, step: int | None = None) -> Dict[str, Any]:
+        """Restore state from the latest (or given) checkpoint; returns the
+        saved ``extra`` metadata (e.g. the stream cursor)."""
+        mgr = self._manager()
+        mgr.wait()
+        like = jax.tree.map(jnp.zeros_like, self.state)
+        shardings = None
+        if self.kind == "mesh":
+            sh = NamedSharding(self.mesh, P(self.engine.axes))
+            shardings = jax.tree.map(lambda _: sh, self.state)
+        state, extra = mgr.restore(like, step=step, shardings=shardings)
+        if shardings is None:
+            # manager returns host (numpy) leaves; put them back on device
+            state = jax.tree.map(jnp.asarray, state)
+        self.state = state
+        self._snap_cache.clear()
+        return extra
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"D4MStream(engine={self.kind}, instances={self.n_instances}, "
+            f"layers={self.plan.n_layers}, sr={self.sr.name})"
+        )

@@ -4,7 +4,7 @@ import networkx as nx
 import numpy as np
 import pytest
 
-from repro.core import analytics, assoc
+from repro.core import analytics, assoc, semiring
 from repro.core.assoc import PAD
 
 
@@ -60,13 +60,51 @@ def test_common_neighbors_and_jaccard(graph):
 
 def test_reachability(graph):
     g, a = graph
+    sr = semiring.MAX_MIN
     r2 = analytics.reachable_within(a, steps=2, cap=2048, max_fanout=24)
-    # spot-check: every 2-hop pair present with weight 1
+    # spot-check: every 2-hop pair present with weight sr.one (inf for
+    # max.min — its true multiplicative identity), absent pairs sr.zero
     paths = dict(nx.all_pairs_shortest_path_length(g, cutoff=2))
     for u in list(g.nodes)[:6]:
         for v in list(g.nodes)[:6]:
             if u == v:
                 continue
-            want = 1.0 if paths.get(u, {}).get(v, 99) <= 2 else 0.0
-            got = float(assoc.get(r2, u, v))
+            want = sr.one if paths.get(u, {}).get(v, 99) <= 2 else sr.zero
+            got = float(assoc.get(r2, u, v, sr=sr))
             assert got == want, (u, v, got, want)
+
+
+@pytest.mark.parametrize("srn", ["min.max", "max.min"])
+def test_reachability_semiring_roundtrip(graph, srn):
+    """Satellite fix: the closure must round-trip under non-default
+    boolean-like semirings — identities come from the semiring, not
+    hardcoded 1.0/0.0 (min.max would break under those: its zero is inf)."""
+    g, a = graph
+    sr = semiring.get(srn)
+    r2 = analytics.reachable_within(a, steps=2, cap=2048, max_fanout=24, sr=sr)
+    paths = dict(nx.all_pairs_shortest_path_length(g, cutoff=2))
+    for u in list(g.nodes)[:4]:
+        for v in list(g.nodes)[:4]:
+            if u == v:
+                continue
+            want = sr.one if paths.get(u, {}).get(v, 99) <= 2 else sr.zero
+            got = float(assoc.get(r2, u, v, sr=sr))
+            assert got == want, (srn, u, v, got, want)
+
+
+@pytest.mark.parametrize("srn", ["plus.times", "max.plus"])
+def test_undirected_view_semiring_roundtrip(graph, srn):
+    """undirected_view's collapsed weights/pads must be sr.one/sr.zero
+    (max.plus pads would otherwise hold 0.0 — its multiplicative identity,
+    not its additive one)."""
+    g, a = graph
+    sr = semiring.get(srn)
+    u = analytics.undirected_view(a, sr=sr)
+    live = np.asarray(u.rows) != PAD
+    np.testing.assert_array_equal(np.asarray(u.vals)[live], sr.one)
+    dead_vals = np.asarray(u.vals)[~live]
+    np.testing.assert_array_equal(dead_vals, np.full_like(dead_vals, sr.zero))
+    # support equals the undirected edge set both ways
+    for x, y in list(g.edges)[:10]:
+        assert float(assoc.get(u, x, y, sr=sr)) == sr.one
+        assert float(assoc.get(u, y, x, sr=sr)) == sr.one

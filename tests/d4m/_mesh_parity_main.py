@@ -1,0 +1,63 @@
+"""Subprocess body for the D=4 mesh parity test (run by test_session.py).
+
+Must force the host device count BEFORE importing jax, which is why this
+lives in its own interpreter: the unit suite itself runs on the real single
+CPU device (see tests/conftest.py).
+
+Asserts that a D4MStream on a 4-device mesh produces a global snapshot
+bit-identical to the legacy MultiStreamEngine driven with the same
+hash-routed stream, then prints PARITY_OK.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=4 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import d4m  # noqa: E402
+from repro.core import multistream  # noqa: E402
+
+
+def main():
+    assert len(jax.devices()) == 4, jax.devices()
+    cuts, top, batch = (16,), 1024, 64
+    steps = 6
+    cfg = d4m.StreamConfig(
+        cuts=cuts, top_capacity=top, batch_size=batch, devices=4
+    )
+    sess = d4m.D4MStream(cfg)
+    assert sess.kind == "mesh" and sess.n_instances == 4
+
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()).reshape(4), ("data",))
+    eng = multistream.MultiStreamEngine(
+        mesh, cuts, top_capacity=top, batch_size=batch, instances_per_device=1
+    )
+    h = eng.init_state()
+
+    rng = np.random.default_rng(0)
+    for _ in range(steps):
+        r = jnp.asarray(rng.integers(0, 96, batch), jnp.int32)
+        c = jnp.asarray(rng.integers(0, 96, batch), jnp.int32)
+        v = jnp.ones((batch,), jnp.float32)
+        dropped = sess.ingest(r, c, v)
+        h, dropped_legacy = eng.ingest(h, r, c, v)
+        assert int(dropped) == int(dropped_legacy) == 0
+
+    cap = 2048
+    got = sess.snapshot(cap=cap)
+    want = eng.snapshot_global(h, cap=cap)
+    np.testing.assert_array_equal(np.asarray(got.rows), np.asarray(want.rows))
+    np.testing.assert_array_equal(np.asarray(got.cols), np.asarray(want.cols))
+    np.testing.assert_array_equal(np.asarray(got.vals), np.asarray(want.vals))
+    assert int(got.nnz) == int(want.nnz)
+    assert int(sess.nnz()) == int(eng.global_nnz(h))
+    print("PARITY_OK")
+
+
+if __name__ == "__main__":
+    main()

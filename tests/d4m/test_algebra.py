@@ -1,0 +1,127 @@
+"""Operator-overload ≡ module-function property tests.
+
+Every operator on Assoc must be *exactly* the corresponding
+``repro.core.assoc`` function under the active cap policy — same keys, same
+values, same nnz/overflow — across random arrays and semirings.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import d4m
+from repro.core import analytics, assoc, semiring
+from repro.core.assoc import PAD
+
+SPACE = 32
+
+
+def _rand_assoc(seed, n, cap, sr=semiring.PLUS_TIMES):
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(rng.integers(0, SPACE, n), jnp.int32)
+    c = jnp.asarray(rng.integers(0, SPACE, n), jnp.int32)
+    v = jnp.asarray(rng.uniform(0.5, 2.0, n), jnp.float32)
+    return assoc.from_triples(r, c, v, cap=cap, sr=sr)
+
+
+def _assert_same(got, want):
+    np.testing.assert_array_equal(np.asarray(got.rows), np.asarray(want.rows))
+    np.testing.assert_array_equal(np.asarray(got.cols), np.asarray(want.cols))
+    np.testing.assert_array_equal(np.asarray(got.vals), np.asarray(want.vals))
+    assert int(got.nnz) == int(want.nnz)
+    assert bool(got.overflow) == bool(want.overflow)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_add_operator(seed):
+    a = _rand_assoc(seed, 24, 32)
+    b = _rand_assoc(seed + 100, 24, 48)
+    _assert_same(a + b, assoc.add(a, b, cap=a.capacity + b.capacity))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_and_operator_is_elem_mul(seed):
+    a = _rand_assoc(seed, 24, 32)
+    b = _rand_assoc(seed + 100, 24, 48)
+    _assert_same(a & b, assoc.elem_mul(a, b, cap=min(a.capacity, b.capacity)))
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_matmul_operator(seed):
+    a = _rand_assoc(seed, 16, 24)
+    b = _rand_assoc(seed + 50, 16, 24)
+    with d4m.cap_policy(matmul_cap=256, max_fanout=8):
+        got = a @ b
+    _assert_same(got, assoc.matmul(a, b, cap=256, max_fanout=8))
+
+
+def test_transpose_and_row_slice():
+    a = _rand_assoc(3, 24, 32)
+    _assert_same(a.T, assoc.transpose(a))
+    r = int(np.asarray(a.rows)[0])
+    _assert_same(a[r, :], assoc.extract_row(a, r, cap=a.capacity))
+    # column slice == row slice of the transpose, transposed back
+    c = int(np.asarray(a.cols)[0])
+    want = assoc.transpose(assoc.extract_row(assoc.transpose(a), c, cap=a.capacity))
+    _assert_same(a[:, c], want)
+
+
+def test_point_query_and_full_slice():
+    a = _rand_assoc(4, 24, 32)
+    r = int(np.asarray(a.rows)[0])
+    c = int(np.asarray(a.cols)[0])
+    assert float(a[r, c]) == float(assoc.get(a, r, c))
+    assert float(a[SPACE + 5, SPACE + 6]) == 0.0  # absent -> sr.zero
+    assert a[:, :] is a
+    with pytest.raises(TypeError):
+        a[3]  # 1-D indexing is not defined
+    with pytest.raises(TypeError):
+        a[0:2, :]  # bounded slices would silently drop keys
+    with pytest.raises(TypeError):
+        a[:, ::2]  # stepped slices likewise
+
+
+def test_topk_matches_analytics():
+    a = _rand_assoc(5, 24, 32)
+    deg = assoc.reduce_rows(a, cap=32)
+    ids_a, vals_a = analytics.top_k_vertices(deg, 4)
+    ids_o, vals_o = deg.topk(4)
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_o))
+    np.testing.assert_array_equal(np.asarray(vals_a), np.asarray(vals_o))
+
+
+def test_cap_policy_scoping_and_nesting():
+    a = _rand_assoc(6, 24, 32)
+    b = _rand_assoc(7, 24, 32)
+    with d4m.cap_policy(add_cap=16):
+        got = a + b
+        assert got.capacity == 16
+        with d4m.cap_policy(mul_cap=8):
+            # nested: outer add_cap still in force
+            assert (a + b).capacity == 16
+            assert (a & b).capacity == 8
+        assert d4m.current_policy().mul_cap is None  # inner scope popped
+    assert (a + b).capacity == a.capacity + b.capacity  # defaults restored
+
+
+@pytest.mark.parametrize("srn", ["max.plus", "min.plus"])
+def test_operators_respect_policy_semiring(srn):
+    sr = semiring.get(srn)
+    a = _rand_assoc(8, 16, 24, sr=sr)
+    b = _rand_assoc(9, 16, 24, sr=sr)
+    with d4m.cap_policy(sr=sr):
+        _assert_same(a + b, assoc.add(a, b, cap=a.capacity + b.capacity, sr=sr))
+        _assert_same(
+            a & b, assoc.elem_mul(a, b, cap=min(a.capacity, b.capacity), sr=sr)
+        )
+
+
+def test_fig1_oneliner_composes():
+    """The paper's Fig. 1 chain must compose purely through operators."""
+    a = _rand_assoc(10, 24, 32)
+    with d4m.cap_policy(matmul_cap=512, max_fanout=16):
+        hot = (a + a.T) & a          # symmetric support restricted to A
+        two_hop = a @ a              # paths of length 2
+    assert int(hot.nnz) > 0
+    assert int(two_hop.nnz) > 0
+    ids, counts = (a + a.T).topk(3)
+    assert ids.shape == (3,) and counts.shape == (3,)

@@ -1,0 +1,98 @@
+"""StreamConfig validation + capacity-planner tests."""
+import jax.numpy as jnp
+import pytest
+
+from repro import d4m
+from repro.core import hierarchical
+
+
+def test_plan_matches_hierarchical_init():
+    """plan() must predict exactly the capacities init() allocates."""
+    cfg = d4m.StreamConfig(cuts=(100, 1000), top_capacity=5000, batch_size=64)
+    plan = cfg.plan()
+    h = hierarchical.init((100, 1000), top_capacity=5000, batch_size=64)
+    assert plan.layer_caps == tuple(l.capacity for l in h.layers)
+    assert plan.bytes_per_instance == hierarchical.memory_bytes(h)
+    assert plan.n_layers == 3
+    assert plan.n_instances == 1
+
+
+def test_plan_instances_and_dtype_scale_memory():
+    base = d4m.StreamConfig(cuts=(64,), top_capacity=512, batch_size=32)
+    packed = d4m.StreamConfig(
+        cuts=(64,), top_capacity=512, batch_size=32, instances_per_device=8
+    )
+    assert packed.plan().total_bytes == 8 * base.plan().total_bytes
+    f64 = d4m.StreamConfig(
+        cuts=(64,), top_capacity=512, batch_size=32, dtype="float64"
+    )
+    assert f64.plan().bytes_per_instance > base.plan().bytes_per_instance
+
+
+def test_geometric_schedule():
+    cfg = d4m.StreamConfig(
+        top_capacity=10_000, batch_size=100, c1=100, cut_ratio=10, n_layers=4
+    )
+    assert cfg.resolved_cuts() == (100, 1000, 10000)
+
+
+def test_snapshot_cap_default_and_override():
+    cfg = d4m.StreamConfig(cuts=(64,), top_capacity=512, batch_size=32)
+    assert cfg.plan().snapshot_cap == sum(cfg.plan().layer_caps)
+    # multi-instance: instances hold disjoint key sets, so the safe global
+    # default scales with the pack
+    cfg_k = d4m.StreamConfig(
+        cuts=(64,), top_capacity=512, batch_size=32, instances_per_device=4
+    )
+    assert cfg_k.plan().snapshot_cap == 4 * sum(cfg.plan().layer_caps)
+    cfg2 = d4m.StreamConfig(
+        cuts=(64,), top_capacity=512, batch_size=32, snapshot_cap=9999
+    )
+    assert cfg2.plan().snapshot_cap == 9999
+
+
+def test_describe_mentions_layers():
+    txt = d4m.StreamConfig(cuts=(64,), top_capacity=512, batch_size=32).plan().describe()
+    assert "layer 1" in txt and "top" in txt
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        dict(cuts=(64, 32)),  # not increasing
+        dict(cuts=(0, 32)),  # non-positive cut
+        dict(top_capacity=0),
+        dict(batch_size=0),
+        dict(instances_per_device=0),
+        dict(engine="warp"),
+        dict(engine="single", instances_per_device=4),
+        dict(engine="packed", devices=2),
+        dict(semiring="no.such"),
+        dict(cuts=None),  # neither cuts nor geometric schedule
+    ],
+)
+def test_validation_rejects(kw):
+    base = dict(cuts=(64,), top_capacity=512, batch_size=32)
+    base.update(kw)
+    with pytest.raises((ValueError, KeyError)):
+        d4m.StreamConfig(**base).validate()
+
+
+def test_engine_auto_resolution():
+    base = dict(cuts=(64,), top_capacity=512, batch_size=32)
+    assert d4m.StreamConfig(**base).resolved_engine() == "single"
+    assert (
+        d4m.StreamConfig(**base, instances_per_device=4).resolved_engine()
+        == "packed"
+    )
+    assert (
+        d4m.StreamConfig(**base, devices=2, instances_per_device=4).resolved_engine()
+        == "mesh"
+    )
+
+
+def test_semiring_object_accepted():
+    cfg = d4m.StreamConfig(
+        cuts=(64,), top_capacity=512, batch_size=32, semiring=d4m.MAX_PLUS
+    )
+    assert cfg.sr is d4m.MAX_PLUS
