@@ -11,8 +11,13 @@ params) that carries an ``updates_per_sec`` rate:
 Boolean ``passed`` verdicts regressing from true to false also trip the
 gate (a shape/structure property broke, not just a rate).
 
-A missing/empty baseline directory exits 0 with a note — the first run on a
-branch, or an expired artifact, must not block CI.
+A missing/empty/unreadable baseline exits 0 with a ``baseline-established``
+line — the first run on a branch, or an expired artifact, must not block CI;
+the fresh artifacts it uploads become the next run's baseline.  Sections are
+matched purely by the ``reporting.py`` schema (section + name + params), so
+any new ``BENCH_<section>.json`` a benchmark emits is covered automatically
+— no gate changes needed per benchmark (asserted by
+``tests/benchmarks/test_regression_gate.py``).
 
 Usage:
   python -m benchmarks.regression_gate --baseline bench-baseline \
@@ -66,10 +71,13 @@ def main(argv=None) -> int:
         return 1
     baseline = load_measurements(args.baseline) if os.path.isdir(args.baseline) else {}
     if not baseline:
+        # first run on a branch / expired artifact: a clean pass, and this
+        # run's uploaded artifacts become the baseline for the next one
         print(
-            f"gate,skip,no baseline artifacts under {args.baseline} "
-            f"(first run or expired artifact) - nothing to compare"
+            f"gate,baseline-established,{len(fresh)} fresh measurement(s), "
+            f"no baseline under {args.baseline} - nothing to compare"
         )
+        print("gate,verdict,PASS")
         return 0
 
     failures, warnings_, compared = [], [], 0

@@ -12,6 +12,7 @@ upload the files as artifacts and a dashboard can diff runs by commit:
       "run_start_ts": "2026-07-30T12:00:00+00:00",
       "run_end_ts": "...",
       "host": {"hostname": ..., "backend": "cpu", "device_count": 8},
+      "ci_run_id": "1234567890",        # GITHUB_RUN_ID; absent locally
       "measurements": [
         {"name": "packed_rate", "params": {"k_per_device": 8, ...},
          "updates_per_sec": 1.2e7, "wall_s": 0.41, ...extras}
@@ -110,7 +111,7 @@ class BenchmarkReport:
         self.measurements.append(m)
 
     def payload(self) -> Dict[str, Any]:
-        return {
+        payload = {
             "schema_version": SCHEMA_VERSION,
             "section": self.section,
             "git_commit_hash": git_commit_hash(),
@@ -120,6 +121,12 @@ class BenchmarkReport:
             "host": _host_info(),
             "measurements": self.measurements,
         }
+        # tie the artifact back to the CI run that produced it (absent in
+        # local runs; the regression gate keys on section+name+params only)
+        ci_run_id = os.environ.get("GITHUB_RUN_ID")
+        if ci_run_id:
+            payload["ci_run_id"] = ci_run_id
+        return payload
 
     def write(self, out_dir: str | None = None) -> str:
         """Write ``BENCH_<section>.json``; returns the path written."""

@@ -2,13 +2,18 @@
 
 Prints ``name,...`` CSV lines AND writes ``BENCH_<section>.json`` structured
 results (schema: ``benchmarks/reporting.py``) to ``--json-dir``; sections:
-  hier_update   — paper Figs. 4/5 (update rate vs cuts, instantaneous decay)
-  scaling       — paper Fig. 6 shape: aggregate rate vs instances, on two
-                  axes — D devices (run standalone or with
-                  XLA_FLAGS=--xla_force_host_platform_device_count=8) and
-                  K vmap-packed instances per device (K ∈ {1, 8, 64, 256})
-  kernels       — Pallas kernel ref/interp microbenches + TPU design stats
-  embed_grad    — LM integration: hierarchical sparse embedding-grad traffic
+  hier            — paper Figs. 4/5 (update rate vs cuts, instantaneous decay)
+  scaling         — paper Fig. 6 shape: aggregate rate vs instances, on two
+                    axes — D devices (run standalone or with
+                    XLA_FLAGS=--xla_force_host_platform_device_count=8) and
+                    K vmap-packed instances per device (K ∈ {1, 8, 64, 256})
+  kernels         — Pallas kernel ref/interp microbenches + TPU design stats
+  embed           — LM integration: hierarchical sparse embedding-grad traffic
+  cascade_kernel  — lane-skipping hier_cascade kernel vs the branchless
+                    cascade: per-step cost vs cascade frequency x K
+
+Select sections with ``--sections hier,scaling`` (comma-separated; CI smoke
+uses this to run only the cheap sections) or the legacy single ``--section``.
 
 Scale: laptop-size defaults (--full restores paper-scale streams; --smoke
 shrinks everything for CI).
@@ -17,11 +22,30 @@ import argparse
 import os
 import sys
 
+SECTIONS = ("hier", "kernels", "embed", "scaling", "cascade_kernel")
+
+
+def parse_sections(args: argparse.Namespace) -> set:
+    if args.sections:
+        chosen = {s.strip() for s in args.sections.split(",") if s.strip()}
+        bad = chosen - set(SECTIONS)
+        if bad:
+            raise SystemExit(
+                f"unknown section(s) {sorted(bad)}; known: {list(SECTIONS)}"
+            )
+        return chosen
+    if args.section == "all":
+        return set(SECTIONS)
+    return {args.section}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
-                    choices=["all", "hier", "kernels", "embed", "scaling"])
+                    choices=["all", *SECTIONS])
+    ap.add_argument("--sections", default=None,
+                    help="comma-separated subset of sections to run "
+                         f"(overrides --section): {','.join(SECTIONS)}")
     ap.add_argument("--full", action="store_true", help="paper-scale streams")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-size streams (fast, still exercises every path)")
@@ -30,8 +54,9 @@ def main() -> None:
     args = ap.parse_args()
     if args.json_dir:
         os.environ["BENCH_JSON_DIR"] = args.json_dir
+    run = parse_sections(args)
 
-    if args.section in ("all", "hier"):
+    if "hier" in run:
         from benchmarks import bench_hier_update
         if args.full:
             bench_hier_update.main(total_edges=100_000_000, group_size=100_000, scale=26)
@@ -39,18 +64,21 @@ def main() -> None:
             bench_hier_update.main(total_edges=80_000, group_size=2_000, scale=14)
         else:
             bench_hier_update.main()
-    if args.section in ("all", "kernels"):
+    if "kernels" in run:
         from benchmarks import bench_kernels
         bench_kernels.main(smoke=args.smoke)
-    if args.section in ("all", "embed"):
+    if "embed" in run:
         from benchmarks import bench_embed_grad
         bench_embed_grad.main(smoke=args.smoke)
-    if args.section in ("all", "scaling"):
+    if "scaling" in run:
         from benchmarks import bench_scaling
         if args.smoke:
             bench_scaling.main(k_values=(1, 8), groups=5, device_sweep=False)
         else:
             bench_scaling.main()
+    if "cascade_kernel" in run:
+        from benchmarks import bench_cascade_kernel
+        bench_cascade_kernel.main(smoke=args.smoke)
 
 
 if __name__ == "__main__":

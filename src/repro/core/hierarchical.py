@@ -59,6 +59,58 @@ def geometric_cuts(c1: int, ratio: int, n_layers: int) -> Tuple[int, ...]:
     return tuple(int(c1 * ratio**i) for i in range(n_layers - 1))
 
 
+def telescoped_caps(
+    cuts: Sequence[int], top_capacity: int, batch_size: int
+) -> Tuple[int, ...]:
+    """The telescoped per-layer capacities (module docstring): the single
+    source of truth shared by :func:`init`, the ``d4m`` capacity planner,
+    and the ``hier_cascade`` kernel's static shape contract."""
+    caps = []
+    below = int(batch_size)
+    for c in cuts:
+        caps.append(int(c) + below)
+        below = caps[-1]
+    caps.append(int(top_capacity) + below)
+    return tuple(caps)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+def pad_layers_pow2(h: HierAssoc, sr: Semiring = PLUS_TIMES) -> HierAssoc:
+    """Grow every layer buffer to the next power of two (PAD keys /
+    semiring-zero values in the tail).
+
+    This is the flat layout the ``hier_cascade`` Pallas kernel consumes: its
+    bitonic merge/sort networks need power-of-two lanes, and padding *once at
+    init* keeps the streaming hot loop free of per-step reshapes.  Padding
+    never changes Assoc semantics — the live prefix, ``nnz``, and ``overflow``
+    are untouched, and every operation masks on PAD — so snapshots off a
+    padded hierarchy are bit-identical to the exact-capacity ones.
+    """
+    layers = []
+    for l in h.layers:
+        cap = l.capacity
+        q = _next_pow2(cap)
+        if q == cap:
+            layers.append(l)
+            continue
+        pad = q - cap
+        layers.append(
+            Assoc(
+                rows=jnp.concatenate([l.rows, jnp.full((pad,), assoc.PAD, jnp.int32)]),
+                cols=jnp.concatenate([l.cols, jnp.full((pad,), assoc.PAD, jnp.int32)]),
+                vals=jnp.concatenate(
+                    [l.vals, jnp.full((pad,), sr.zero, l.vals.dtype)]
+                ),
+                nnz=l.nnz,
+                overflow=l.overflow,
+            )
+        )
+    return HierAssoc(layers=tuple(layers), cascades=h.cascades)
+
+
 def init(
     cuts: Sequence[int],
     top_capacity: int,
@@ -76,12 +128,7 @@ def init(
     cuts = tuple(int(c) for c in cuts)
     if any(b <= a for a, b in zip(cuts, cuts[1:])):
         raise ValueError(f"cuts must be strictly increasing, got {cuts}")
-    caps = []
-    below = int(batch_size)  # max live entries a cascade from below can carry
-    for c in cuts:
-        caps.append(c + below)
-        below = caps[-1]
-    caps.append(top_capacity + below)
+    caps = telescoped_caps(cuts, top_capacity, batch_size)
     layers = tuple(assoc.empty(cap, sr, dtype) for cap in caps)
     return HierAssoc(
         layers=layers, cascades=jnp.zeros((len(caps),), jnp.int32)

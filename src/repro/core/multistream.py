@@ -61,16 +61,46 @@ def init_packed(
     batch_size: int,
     sr: Semiring = PLUS_TIMES,
     dtype=jnp.float32,
+    pad_pow2: bool = False,
 ) -> HierAssoc:
     """``n_instances`` independent empty hierarchies, stacked per leaf.
 
     The result is an ordinary :class:`HierAssoc` pytree whose every leaf has a
     leading ``[n_instances]`` axis — instance ``k`` is the slice ``leaf[k]``.
+
+    ``pad_pow2=True`` grows every layer buffer to the next power of two
+    (:func:`repro.core.hierarchical.pad_layers_pow2`) — the persistent flat
+    layout the ``hier_cascade`` Pallas kernel streams over.  Semantics are
+    unchanged; only buffer tails grow.
     """
     h = hierarchical.init(cuts, top_capacity, batch_size, sr, dtype)
+    if pad_pow2:
+        h = hierarchical.pad_layers_pow2(h, sr)
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (n_instances,) + x.shape), h
     )
+
+
+def flat_layer_state(h: HierAssoc):
+    """A packed hierarchy's buffers in the flat layout the ``hier_cascade``
+    kernel consumes: per-layer ``(rows, cols, vals)`` triples (each
+    ``[K, cap_i]``) plus the stacked ``[K, L]`` scalar planes (nnz counters,
+    cascade counters, overflow flags).  Pure re-arrangement — no copies of
+    the key/value lanes."""
+    bufs = tuple((l.rows, l.cols, l.vals) for l in h.layers)
+    nnz = jnp.stack([l.nnz for l in h.layers], axis=1)
+    overflow = jnp.stack([l.overflow for l in h.layers], axis=1)
+    return bufs, nnz, h.cascades, overflow
+
+
+def from_flat_layer_state(bufs, nnz, cascades, overflow) -> HierAssoc:
+    """Inverse of :func:`flat_layer_state` — reassemble the packed pytree
+    from the kernel's output planes."""
+    layers = tuple(
+        Assoc(rows=r, cols=c, vals=v, nnz=nnz[:, i], overflow=overflow[:, i])
+        for i, (r, c, v) in enumerate(bufs)
+    )
+    return HierAssoc(layers=layers, cascades=cascades)
 
 
 def packed_update(

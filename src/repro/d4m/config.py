@@ -12,15 +12,19 @@ snapshot / query capacities every analysis call defaults to.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, Tuple
 
 import jax.numpy as jnp
 
 from repro.core import semiring as semiring_mod
-from repro.core.hierarchical import geometric_cuts
+from repro.core.hierarchical import geometric_cuts, telescoped_caps
 from repro.core.semiring import Semiring
 
-ENGINES = ("auto", "single", "packed", "mesh")
+ENGINES = ("auto", "single", "packed", "pallas", "mesh")
+
+# opt-in override for "auto" engine resolution (CI forces paths with it)
+ENGINE_ENV_VAR = "REPRO_D4M_ENGINE"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,20 +114,53 @@ class StreamConfig:
             )
         if self.engine == "packed" and d != 1:
             raise ValueError(f"engine='packed' requires devices=1, got D={d}")
+        if self.engine == "pallas" and d != 1:
+            raise ValueError(f"engine='pallas' requires devices=1, got D={d}")
         if self.max_fanout < 1:
             raise ValueError(f"max_fanout must be >= 1, got {self.max_fanout}")
         self.sr  # raises KeyError on an unknown semiring name
         return self
 
+    def _engine_fits(self, engine: str) -> bool:
+        """Whether ``engine`` is structurally valid for this K/D shape."""
+        d = self.resolved_devices()
+        k = self.instances_per_device
+        if engine == "single":
+            return k == 1 and d == 1
+        if engine in ("packed", "pallas"):
+            return d == 1
+        return engine in ENGINES
+
     def resolved_engine(self) -> str:
-        """The engine ``"auto"`` resolves to (cond / vmap pack / shard_map)."""
+        """The engine ``"auto"`` resolves to.
+
+        Resolution order: an explicit ``engine=`` always wins; then the
+        ``REPRO_D4M_ENGINE`` environment variable (when it fits the K/D
+        shape — how CI forces each path without editing configs); then the
+        shape heuristics — ``mesh`` at D>1, and at D=1 the lane-skipping
+        ``pallas`` cascade kernel when the accelerator backend is TPU (its
+        compile target, where branchless ``jnp.where`` merges burn VPU lanes
+        on never-taken cascades) falling back to the branchless ``packed``
+        vmap on CPU/GPU hosts, and the ``lax.cond`` ``single`` engine at
+        K=1.
+        """
         self.validate()
         if self.engine != "auto":
             return self.engine
+        env = os.environ.get(ENGINE_ENV_VAR, "").strip()
+        if env:
+            if env not in ENGINES:
+                raise ValueError(
+                    f"{ENGINE_ENV_VAR}={env!r} is not one of {ENGINES}"
+                )
+            if env != "auto" and self._engine_fits(env):
+                return env
         if self.resolved_devices() > 1:
             return "mesh"
         if self.instances_per_device > 1:
-            return "packed"
+            import jax
+
+            return "pallas" if jax.default_backend() == "tpu" else "packed"
         return "single"
 
     # -- capacity planning ---------------------------------------------------
@@ -136,12 +173,9 @@ class StreamConfig:
         """
         self.validate()
         cuts = self.resolved_cuts()
-        caps = []
-        below = int(self.batch_size)
-        for c in cuts:
-            caps.append(int(c) + below)
-            below = caps[-1]
-        caps.append(int(self.top_capacity) + below)
+        caps = list(
+            telescoped_caps(cuts, self.top_capacity, self.batch_size)
+        )
         itemsize = self.jnp_dtype.itemsize
         bytes_per_layer = tuple(cap * (4 + 4 + itemsize) for cap in caps)
         n_instances = self.instances_per_device * self.resolved_devices()

@@ -13,6 +13,11 @@ automatically:
 * ``packed`` — K>1 on one device: the branchless vmapped cascade
   (:func:`repro.core.multistream.packed_update`), K independent instances
   in one fused program;
+* ``pallas`` — K>=1 on one device: the lane-skipping cascade kernel
+  (:mod:`repro.kernels.hier_cascade`); one grid lane per instance, layer
+  merges predicated on each lane's own cut checks, so the no-cascade step
+  costs O(batch) instead of the branchless path's Σ layer caps (auto-picked
+  on TPU backends; force with ``engine="pallas"`` or ``REPRO_D4M_ENGINE``);
 * ``mesh`` — D>1: :class:`repro.core.multistream.MultiStreamEngine`
   (``shard_map``; K x D instances, zero update-path collectives).
 
@@ -327,6 +332,25 @@ class D4MStream:
                     r, c, v, k, self.batch_size, sr
                 )
             )
+        elif self.kind == "pallas":
+            from repro.kernels.hier_cascade import ops as cascade_ops
+
+            self.engine = None
+            self.n_instances = self.k_per_device
+            k = self.n_instances
+            sr = self.sr
+            # interpret mode everywhere except the kernel's compile target;
+            # the compiled TPU leg is the ROADMAP's named next step
+            self._pallas_interpret = jax.default_backend() != "tpu"
+            self._step = cascade_ops.build_step(
+                self.cuts, self.plan.layer_caps, sr, donate=True,
+                interpret=self._pallas_interpret,
+            )
+            self._route = jax.jit(
+                lambda r, c, v: multistream.route_to_instances(
+                    r, c, v, k, self.batch_size, sr
+                )
+            )
         else:  # single
             self.engine = None
             self.n_instances = 1
@@ -356,7 +380,7 @@ class D4MStream:
     def _init_state(self) -> HierAssoc:
         if self.kind == "mesh":
             return self.engine.init_state()
-        if self.kind == "packed":
+        if self.kind in ("packed", "pallas"):
             return multistream.init_packed(
                 self.n_instances,
                 self.cuts,
@@ -364,6 +388,9 @@ class D4MStream:
                 batch_size=self.batch_size,
                 sr=self.sr,
                 dtype=self.dtype,
+                # the cascade kernel's bitonic networks stream over pow2-
+                # padded persistent buffers (hierarchical.pad_layers_pow2)
+                pad_pow2=(self.kind == "pallas"),
             )
         return hierarchical.init(
             self.cuts,
@@ -404,7 +431,7 @@ class D4MStream:
         if self.kind == "single":
             self.update(rows, cols, vals)
             return jnp.zeros((), jnp.int32)
-        if self.kind == "packed":
+        if self.kind in ("packed", "pallas"):
             br, bc, bv, dropped = self._route(rows, cols, vals)
             self.update(br, bc, bv)
             return dropped
@@ -427,6 +454,27 @@ class D4MStream:
                 "over update() so every step runs the verified shard_map "
                 "program"
             )
+        if self.kind == "pallas":
+            from repro.kernels.hier_cascade import ops as cascade_ops
+
+            if rows.ndim != 3 or rows.shape[1] != self.n_instances:
+                raise ValueError(
+                    f"expected [T, {self.n_instances}, B] instance-major "
+                    f"stream, got {rows.shape}"
+                )
+            cuts, caps, sr = self.cuts, self.plan.layer_caps, self.sr
+            interpret = self._pallas_interpret
+
+            def body(carry: HierAssoc, batch):
+                r, c, v = batch
+                nxt = cascade_ops.cascade_update(
+                    carry, r, c, v, cuts, caps, sr, interpret=interpret
+                )
+                return nxt, multistream.nnz_per_instance(nxt)
+
+            self.state, trace = lax.scan(body, self.state, (rows, cols, vals))
+            self._snap_cache.clear()
+            return trace
         instances = None if self.kind == "single" else self.n_instances
         self.state, trace = scan_ingest(
             self.state, rows, cols, vals, self.cuts, self.sr,
@@ -447,7 +495,7 @@ class D4MStream:
         without updating (``(rows, cols, vals, dropped)``)."""
         if self.kind == "single":
             return rows, cols, vals, jnp.zeros((), jnp.int32)
-        if self.kind == "packed":
+        if self.kind in ("packed", "pallas"):
             return self._route(rows, cols, vals)
         return self.engine.route(rows, cols, vals)
 
@@ -468,7 +516,7 @@ class D4MStream:
             if per_instance:
                 raise ValueError("single-instance session has no per-instance axis")
             snap = hierarchical.snapshot(self.state, cap=cap, sr=self.sr)
-        elif self.kind == "packed":
+        elif self.kind in ("packed", "pallas"):
             snap = multistream.snapshot_packed(self.state, cap=cap, sr=self.sr)
             if not per_instance:
                 snap = multistream.merge_snapshots(snap, cap=cap, sr=self.sr)

@@ -11,6 +11,7 @@ scan SSM): the paper's contribution is the sparse *update* path, not dense
 compute, and XLA already emits near-roofline HLO for the dense layers.
 """
 from . import common  # noqa: F401
+from .hier_cascade import ops as hier_cascade_ops  # noqa: F401
 from .merge_add import ops as merge_add_ops  # noqa: F401
 from .scatter_add import ops as scatter_add_ops  # noqa: F401
 from .sort_dedup import ops as sort_dedup_ops  # noqa: F401

@@ -111,6 +111,50 @@ def run_combine(rows, cols, vals, add_fn) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return vals, is_end
 
 
+def compact_monotone(lanes: Sequence[jnp.ndarray], keep: jnp.ndarray, fills):
+    """Stable oblivious compaction in ``log2 n`` strided-shift passes.
+
+    Moves the ``keep``-flagged elements of each lane to the prefix (original
+    order preserved) and fills everything behind them with ``fills``.  Each
+    survivor must travel left by the number of dead slots before it; that
+    distance is non-decreasing in position, so moving it bit-by-bit (LSB
+    first, one whole-array shift-by-``2^b`` + select per pass) is
+    collision-free — the cheap-to-compile alternative to a full bitonic sort
+    for the cascade kernel's per-merge compaction (``log n`` passes instead
+    of ``log^2 n / 2``).  Like the other helpers: no gathers, no scatters,
+    only constant-stride moves and selects.
+    """
+    n = lanes[0].shape[0]
+    keep = keep.astype(jnp.bool_)
+    dead = jnp.logical_not(keep).astype(jnp.int32)
+    # exclusive prefix count of dead slots = how far each survivor travels
+    shift = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(dead)[:-1]]
+    )
+    cur = [jnp.where(keep, x, f) for x, f in zip(lanes, fills)]
+    live = keep
+    s = jnp.where(keep, shift, 0)
+    d = 1
+    while d < n:
+
+        def shl(x, fill):
+            return jnp.concatenate(
+                [x[d:], jnp.full((d,), fill, x.dtype)]
+            )
+
+        moving = live & ((s & d) != 0)
+        staying = live & ((s & d) == 0)
+        arriving = shl(moving, False)  # element at i+d lands on i
+        cur = [
+            jnp.where(arriving, shl(x, f), jnp.where(staying, x, f))
+            for x, f in zip(cur, fills)
+        ]
+        s = jnp.where(arriving, shl(s, 0), jnp.where(staying, s, 0))
+        live = arriving | staying
+        d *= 2
+    return cur
+
+
 def next_pow2(n: int) -> int:
     p = 1
     while p < n:

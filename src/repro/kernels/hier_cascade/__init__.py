@@ -1,0 +1,2 @@
+"""Lane-skipping Pallas cascade kernel for the packed multi-stream engine."""
+from . import ops  # noqa: F401

@@ -1,0 +1,238 @@
+"""Pallas kernel: lane-skipping hierarchical cascade for the packed engine.
+
+One ``pallas_call`` executes a full streaming update step for K stacked
+``HierAssoc`` instances.  The grid is the instance axis — each grid lane owns
+one instance's layer buffers — and, unlike the branchless vmapped cascade
+(``hierarchical.update(..., branchless=True)``), a lane only pays for the
+layer merges its own cut checks actually fire:
+
+* the layer-1 insert (merge the canonicalized batch into the smallest layer)
+  runs unconditionally — the O(batch) fast path the paper's insert rates
+  depend on;
+* every layer-i -> i+1 merge sits under ``@pl.when(nnz_i > cut_i)``: lanes
+  whose cut did not fire skip the merge entirely instead of computing a
+  full-capacity ``jnp.where`` select;
+* all layer buffers are ``input_output_aliases``-ed, so untouched layers are
+  not even copied — the no-cascade step moves O(batch) data, not Σ layer caps.
+
+TPU adaptation (same design language as ``merge_add``/``sort_dedup``): every
+merge is a bitonic *merge* network over VMEM-resident ``(row, col, src, val)``
+lanes followed by a one-pass duplicate pair-combine (layers hold unique keys,
+so runs have length <= 2), and compaction back to canonical sorted-COO form
+is a monotone shift network (``common.compact_monotone``, ``log2 n`` strided
+passes) — the whole kernel stays gather/scatter-free.  The compaction is the
+price of keeping the cascade inside one kernel; it only runs on lanes whose
+cut fired, which the hierarchy makes rare by construction.
+
+Buffers must be power-of-two padded (``hierarchical.pad_layers_pow2`` /
+``multistream.init_packed(pad_pow2=True)``); true capacities are passed
+statically so overflow semantics match ``assoc.add`` exactly.  Validated in
+``interpret=True`` mode on CPU (the CI parity suite); the compiled TPU run is
+the ROADMAP's named next step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.assoc import PAD
+from repro.core.semiring import PLUS_TIMES, Semiring
+
+from .. import common
+
+
+def _merge_canonical(dst, src, cap_dst: int, sr: Semiring):
+    """Merge two canonical sorted-COO lane triples into the dst layer's
+    canonical form.  ``dst``/``src`` are ``(rows, cols, vals)`` flat arrays of
+    power-of-two length with ``len(src) <= len(dst)``; returns
+    ``(rows, cols, vals, nnz, overflow)`` with the output truncated to
+    ``len(dst)`` and masked at the true capacity ``cap_dst``.
+
+    Bit-compatible with ``assoc.add(dst, src, cap=cap_dst, sr=sr)``: equal
+    keys fold as ``sr.add(dst_val, src_val)`` (dst is the "left" operand, as
+    in ``_combine_sorted``), survivors keep sorted order, entries past
+    ``cap_dst`` are dropped with the overflow flag raised.
+    """
+    dr, dc, dv = dst
+    sr_r, sr_c, sr_v = src
+    qd, qs = dr.shape[0], sr_r.shape[0]
+    total = 2 * qd
+    # pad src so dst ++ reversed(src ++ pads) is a power-of-two bitonic seq
+    if qs < qd:
+        sr_r = jnp.concatenate([sr_r, jnp.full((qd - qs,), PAD, jnp.int32)])
+        sr_c = jnp.concatenate([sr_c, jnp.full((qd - qs,), PAD, jnp.int32)])
+        sr_v = jnp.concatenate(
+            [sr_v, jnp.full((qd - qs,), sr.zero, sr_v.dtype)]
+        )
+    rows = jnp.concatenate([dr, sr_r[::-1]])
+    cols = jnp.concatenate([dc, sr_c[::-1]])
+    vals = jnp.concatenate([dv, sr_v[::-1]])
+    # src lane breaks (row, col) ties: dst entries sort before src entries,
+    # fixing the fold order of duplicate keys
+    lane = jnp.concatenate(
+        [jnp.zeros((qd,), jnp.int32), jnp.ones((qd,), jnp.int32)]
+    )
+    rows, cols, lane, vals = common.bitonic_merge((rows, cols, lane, vals))
+    # duplicate fold: both inputs hold unique keys, so every run has length
+    # <= 2 and one shift pass combines it — sr.add(prev=dst, cur=src)
+    idx = jnp.arange(total, dtype=jnp.int32)
+    pr = jnp.concatenate([rows[:1], rows[:-1]])
+    pc = jnp.concatenate([cols[:1], cols[:-1]])
+    pv = jnp.concatenate([vals[:1], vals[:-1]])
+    same = (rows == pr) & (cols == pc) & (idx >= 1)
+    vals = jnp.where(same, sr.add(pv, vals), vals)
+    nr = jnp.concatenate([rows[1:], jnp.full((1,), -1, jnp.int32)])
+    nc = jnp.concatenate([cols[1:], jnp.full((1,), -1, jnp.int32)])
+    is_end = (rows != nr) | (cols != nc)
+    keep = is_end & (rows != PAD)
+    n_surv = jnp.sum(keep.astype(jnp.int32))
+    # compaction back to canonical form: monotone shift network, log2(2*qd)
+    # strided passes — oblivious (no gather/scatter), survivors keep order
+    zero = jnp.asarray(sr.zero, vals.dtype)
+    rows, cols, vals = common.compact_monotone(
+        (rows, cols, vals), keep, (PAD, PAD, zero)
+    )
+    rows, cols, vals = rows[:qd], cols[:qd], vals[:qd]
+    # enforce the true (unpadded) capacity, exactly like assoc._compact
+    in_cap = jnp.arange(qd, dtype=jnp.int32) < cap_dst
+    rows = jnp.where(in_cap, rows, PAD)
+    cols = jnp.where(in_cap, cols, PAD)
+    vals = jnp.where(in_cap, vals, zero)
+    nnz = jnp.minimum(n_surv, cap_dst)
+    overflow = n_surv > cap_dst
+    return rows, cols, vals, nnz, overflow
+
+
+def _cascade_kernel(*refs, cuts, caps, sr: Semiring):
+    """One grid lane = one instance.  Ref order (all blocks ``[1, width]``):
+    in: b_rows, b_cols, b_vals, nnz, cascades, overflow, L x (rows, cols, vals)
+    out: nnz', cascades', overflow', L x (rows, cols, vals)  [layers aliased]
+    """
+    n_layers = len(caps)
+    (b_rows_ref, b_cols_ref, b_vals_ref, nnz_ref, casc_ref, ov_ref) = refs[:6]
+    lin = [refs[6 + 3 * i : 9 + 3 * i] for i in range(n_layers)]
+    out = refs[6 + 3 * n_layers :]
+    nnz_o, casc_o, ov_o = out[:3]
+    lout = [out[3 + 3 * i : 6 + 3 * i] for i in range(n_layers)]
+
+    # scalar planes pass through; layer buffers pass through by aliasing
+    nnz_o[...] = nnz_ref[...]
+    casc_o[...] = casc_ref[...]
+    ov_o[...] = ov_ref[...]
+
+    # -- layer-1 insert: always runs, O(batch) ------------------------------
+    r1, c1, v1, n1, of1 = _merge_canonical(
+        (lin[0][0][0, :], lin[0][1][0, :], lin[0][2][0, :]),
+        (b_rows_ref[0, :], b_cols_ref[0, :], b_vals_ref[0, :]),
+        cap_dst=caps[0],
+        sr=sr,
+    )
+    lout[0][0][0, :] = r1
+    lout[0][1][0, :] = c1
+    lout[0][2][0, :] = v1
+    nnz_o[0, 0] = n1
+    ov_o[0, 0] = ov_ref[0, 0] | of1
+
+    # -- cascade: layer i -> i+1 only where the cut fired -------------------
+    for i, cut in enumerate(cuts):
+        pred = nnz_o[0, i] > cut
+
+        @pl.when(pred)
+        def _(i=i):
+            src = lout[i]
+            dst = lout[i + 1]
+            mr, mc, mv, mn, mof = _merge_canonical(
+                (dst[0][0, :], dst[1][0, :], dst[2][0, :]),
+                (src[0][0, :], src[1][0, :], src[2][0, :]),
+                cap_dst=caps[i + 1],
+                sr=sr,
+            )
+            dst[0][0, :] = mr
+            dst[1][0, :] = mc
+            dst[2][0, :] = mv
+            nnz_o[0, i + 1] = mn
+            ov_o[0, i + 1] = ov_o[0, i + 1] | ov_o[0, i] | mof
+            # clear the source layer (assoc.empty semantics: overflow resets)
+            qs = src[0].shape[1]
+            src[0][0, :] = jnp.full((qs,), PAD, jnp.int32)
+            src[1][0, :] = jnp.full((qs,), PAD, jnp.int32)
+            src[2][0, :] = jnp.full((qs,), sr.zero, src[2].dtype)
+            nnz_o[0, i] = jnp.zeros((), jnp.int32)
+            ov_o[0, i] = jnp.zeros((), jnp.bool_)
+            casc_o[0, i + 1] = casc_o[0, i + 1] + 1
+
+
+def hier_cascade_pallas(
+    batch_bufs,
+    nnz,
+    cascades,
+    overflow,
+    layer_bufs,
+    cuts,
+    caps,
+    sr: Semiring = PLUS_TIMES,
+    interpret: bool = True,
+):
+    """Run one packed cascade step over all K instance lanes.
+
+    ``batch_bufs`` = canonical batch ``(rows, cols, vals)`` each ``[K, QB]``
+    (power-of-two padded); ``layer_bufs`` = per-layer ``(rows, cols, vals)``
+    each ``[K, Q_i]`` (power-of-two padded); ``nnz``/``cascades`` ``[K, L]``
+    int32, ``overflow`` ``[K, L]`` bool.  ``caps`` are the true telescoped
+    capacities.  Returns ``(nnz', cascades', overflow', layer_bufs')``.
+    """
+    cuts = tuple(int(c) for c in cuts)
+    caps = tuple(int(c) for c in caps)
+    n_layers = len(caps)
+    if len(cuts) != n_layers - 1:
+        raise ValueError(f"{len(cuts)} cuts needs {len(cuts) + 1} layers, got {n_layers}")
+    k = batch_bufs[0].shape[0]
+    qb = batch_bufs[0].shape[1]
+    widths = [bufs[0].shape[1] for bufs in layer_bufs]
+    for q, cap in zip(widths, caps):
+        if q & (q - 1) or q < cap:
+            raise ValueError(
+                f"layer buffers must be pow2-padded >= their true cap "
+                f"(pad_layers_pow2), got width {q} for cap {cap}"
+            )
+    if qb & (qb - 1) or qb > widths[0]:
+        raise ValueError(f"batch width {qb} must be pow2 and <= layer-1 width {widths[0]}")
+    for qa, qb_ in zip(widths, widths[1:]):
+        if qa > qb_:
+            raise ValueError(f"layer widths must be non-decreasing, got {widths}")
+
+    dtype = batch_bufs[2].dtype
+    spec1 = lambda w: pl.BlockSpec((1, w), lambda kk: (kk, 0))
+    in_specs = [spec1(qb)] * 3 + [spec1(n_layers)] * 3
+    out_specs = [spec1(n_layers)] * 3
+    out_shape = [
+        jax.ShapeDtypeStruct((k, n_layers), jnp.int32),
+        jax.ShapeDtypeStruct((k, n_layers), jnp.int32),
+        jax.ShapeDtypeStruct((k, n_layers), jnp.bool_),
+    ]
+    operands = [*batch_bufs, nnz, cascades, overflow]
+    aliases = {}
+    for i, (q, bufs) in enumerate(zip(widths, layer_bufs)):
+        for j, (buf, dt) in enumerate(zip(bufs, (jnp.int32, jnp.int32, dtype))):
+            in_specs.append(spec1(q))
+            out_specs.append(spec1(q))
+            out_shape.append(jax.ShapeDtypeStruct((k, q), dt))
+            aliases[6 + 3 * i + j] = 3 + 3 * i + j
+            operands.append(buf)
+
+    kernel = functools.partial(_cascade_kernel, cuts=cuts, caps=caps, sr=sr)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(k,),
+        out_shape=out_shape,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(*operands)
+    nnz_o, casc_o, ov_o = outs[:3]
+    layers_o = [tuple(outs[3 + 3 * i : 6 + 3 * i]) for i in range(n_layers)]
+    return nnz_o, casc_o, ov_o, layers_o

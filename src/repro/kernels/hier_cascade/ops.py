@@ -1,0 +1,125 @@
+"""Jit'd wrapper: one packed ``D4MStream`` update step through the
+lane-skipping cascade kernel.
+
+``cascade_update(h, rows, cols, vals, cuts, caps, sr)`` is the drop-in
+equivalent of ``multistream.packed_update`` for a pow2-padded packed
+hierarchy (``multistream.init_packed(..., pad_pow2=True)``): bit-identical
+snapshots / nnz / cascade counters / overflow flags, but per-step cost that
+tracks the lanes whose cuts actually fired instead of Σ layer capacities.
+
+The batch is canonicalized *outside* the kernel with the exact
+``assoc.from_triples`` the cond and branchless engines use, so all three
+paths fold duplicate batch keys identically — that, plus the kernel's
+``sr.add(dst, src)`` fold order, is what makes the parity bit-exact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import assoc as assoc_mod
+from repro.core import multistream
+from repro.core.assoc import PAD
+from repro.core.hierarchical import HierAssoc
+from repro.core.semiring import PLUS_TIMES, Semiring
+
+from .. import common
+from .kernel import hier_cascade_pallas
+
+
+def _pad_axis1(x, width, fill):
+    k, n = x.shape
+    if n == width:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((k, width - n), fill, x.dtype)], axis=1
+    )
+
+
+def cascade_update(
+    h: HierAssoc,
+    rows: jax.Array,  # [K, B] int32
+    cols: jax.Array,
+    vals: jax.Array,
+    cuts: Sequence[int],
+    caps: Sequence[int],
+    sr: Semiring = PLUS_TIMES,
+    interpret: bool = True,
+) -> HierAssoc:
+    """One streaming update on every packed instance via the Pallas kernel.
+
+    ``h`` must be pow2-padded (``init_packed(pad_pow2=True)``); ``caps`` are
+    the true telescoped capacities (``hierarchical.telescoped_caps`` /
+    ``StreamConfig.plan().layer_caps``).
+    """
+    cuts = tuple(int(c) for c in cuts)
+    caps = tuple(int(c) for c in caps)
+    b = rows.shape[1]
+    # same canonicalization as update_triples: sort + fold duplicates
+    batch = jax.vmap(
+        lambda r, c, v: assoc_mod.from_triples(r, c, v, cap=b, sr=sr)
+    )(rows, cols, vals)
+    qb = common.next_pow2(b)
+    batch_bufs = (
+        _pad_axis1(batch.rows, qb, PAD),
+        _pad_axis1(batch.cols, qb, PAD),
+        _pad_axis1(batch.vals, qb, jnp.asarray(sr.zero, batch.vals.dtype)),
+    )
+    layer_bufs, nnz, cascades, overflow = multistream.flat_layer_state(h)
+    # a malformed batch surfaces on layer 1 exactly as assoc.add would
+    overflow = overflow.at[:, 0].set(overflow[:, 0] | batch.overflow)
+    nnz_o, casc_o, ov_o, layers_o = hier_cascade_pallas(
+        batch_bufs,
+        nnz,
+        cascades,
+        overflow,
+        layer_bufs,
+        cuts=cuts,
+        caps=caps,
+        sr=sr,
+        interpret=interpret,
+    )
+    return multistream.from_flat_layer_state(layers_o, nnz_o, casc_o, ov_o)
+
+
+def build_step(
+    cuts: Sequence[int],
+    caps: Sequence[int],
+    sr: Semiring = PLUS_TIMES,
+    donate: bool = True,
+    interpret: bool = True,
+):
+    """A jitted ``(h, rows, cols, vals) -> h`` kernel step.
+
+    Donation keeps the (aliased) layer buffers in place across steps — with
+    ``input_output_aliases`` inside the kernel this makes the no-cascade path
+    a true in-place O(batch) update, no Σ-cap copies.
+    """
+    cuts = tuple(int(c) for c in cuts)
+    caps = tuple(int(c) for c in caps)
+
+    def step(h: HierAssoc, rows, cols, vals) -> HierAssoc:
+        return cascade_update(h, rows, cols, vals, cuts, caps, sr, interpret)
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def init_state(
+    n_instances: int,
+    cuts: Sequence[int],
+    top_capacity: int,
+    batch_size: int,
+    sr: Semiring = PLUS_TIMES,
+    dtype=jnp.float32,
+) -> Tuple[HierAssoc, Tuple[int, ...]]:
+    """Kernel-layout packed state + the true capacities to drive it with."""
+    from repro.core.hierarchical import telescoped_caps
+
+    caps = telescoped_caps(tuple(int(c) for c in cuts), top_capacity, batch_size)
+    h = multistream.init_packed(
+        n_instances, cuts, top_capacity, batch_size, sr, dtype, pad_pow2=True
+    )
+    return h, caps

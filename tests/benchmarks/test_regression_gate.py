@@ -1,0 +1,152 @@
+"""Unit tests for the benchmark regression gate.
+
+Covers the first-run contract (missing baseline = clean "baseline
+established" pass, not an error) and the schema-generic coverage guarantee:
+any ``BENCH_<section>.json`` on the ``reporting.py`` schema — including the
+new ``BENCH_cascade_kernel.json`` — is compared automatically, with no
+per-benchmark gate code.
+"""
+import json
+import os
+
+from benchmarks.regression_gate import load_measurements, main
+
+
+def _write_bench(dir_path, section, measurements):
+    os.makedirs(dir_path, exist_ok=True)
+    payload = {
+        "schema_version": 1,
+        "section": section,
+        "git_commit_hash": "deadbeef",
+        "git_branch": "test",
+        "measurements": measurements,
+    }
+    with open(os.path.join(dir_path, f"BENCH_{section}.json"), "w") as f:
+        json.dump(payload, f)
+
+
+def _rate(name, rate, **params):
+    return {"name": name, "params": params, "updates_per_sec": rate}
+
+
+def _verdict(name, passed, **params):
+    return {"name": name, "params": params, "passed": passed}
+
+
+# ------------------------------------------------------- first-run contract
+def test_missing_baseline_is_clean_pass(tmp_path, capsys):
+    fresh = tmp_path / "fresh"
+    _write_bench(fresh, "scaling", [_rate("packed_rate", 1e6, k=8)])
+    rc = main(["--baseline", str(tmp_path / "nope"), "--fresh", str(fresh)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "baseline-established" in out
+    assert "gate,verdict,PASS" in out
+
+
+def test_empty_baseline_dir_is_clean_pass(tmp_path, capsys):
+    fresh, base = tmp_path / "fresh", tmp_path / "base"
+    base.mkdir()
+    _write_bench(fresh, "scaling", [_rate("packed_rate", 1e6, k=8)])
+    rc = main(["--baseline", str(base), "--fresh", str(fresh)])
+    assert rc == 0
+    assert "baseline-established" in capsys.readouterr().out
+
+
+def test_unreadable_baseline_json_is_clean_pass(tmp_path, capsys):
+    fresh, base = tmp_path / "fresh", tmp_path / "base"
+    base.mkdir()
+    (base / "BENCH_broken.json").write_text("{not json")
+    _write_bench(fresh, "scaling", [_rate("packed_rate", 1e6, k=8)])
+    rc = main(["--baseline", str(base), "--fresh", str(fresh)])
+    assert rc == 0
+    assert "baseline-established" in capsys.readouterr().out
+
+
+def test_missing_fresh_is_still_an_error(tmp_path, capsys):
+    rc = main(
+        ["--baseline", str(tmp_path), "--fresh", str(tmp_path / "nope")]
+    )
+    assert rc == 1
+    assert "gate,error" in capsys.readouterr().out
+
+
+# -------------------------------------------------------- gate behaviour
+def test_rate_regression_trips_gate(tmp_path, capsys):
+    fresh, base = tmp_path / "fresh", tmp_path / "base"
+    _write_bench(base, "scaling", [_rate("packed_rate", 1e6, k=8)])
+    _write_bench(fresh, "scaling", [_rate("packed_rate", 0.5e6, k=8)])
+    rc = main(["--baseline", str(base), "--fresh", str(fresh)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "gate,FAIL" in out
+
+
+def test_small_drop_warns_but_passes(tmp_path, capsys):
+    fresh, base = tmp_path / "fresh", tmp_path / "base"
+    _write_bench(base, "scaling", [_rate("packed_rate", 1e6, k=8)])
+    _write_bench(fresh, "scaling", [_rate("packed_rate", 0.85e6, k=8)])
+    rc = main(["--baseline", str(base), "--fresh", str(fresh)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "gate,WARN" in out
+
+
+# --------------------------------------- schema-generic section coverage
+def test_cascade_kernel_section_covered_automatically(tmp_path, capsys):
+    """The gate has no section list: BENCH_cascade_kernel.json measurements
+    (rates AND the lane_skip_speedup verdict) are diffed purely by the
+    schema key (section, name, params)."""
+    fresh, base = tmp_path / "fresh", tmp_path / "base"
+    base_m = [
+        _rate("cascade_step", 2e6, k=8, schedule="0pct", engine="pallas"),
+        _verdict("lane_skip_speedup", True, k=8),
+    ]
+    _write_bench(base, "cascade_kernel", base_m)
+    # fresh run: rate fine, but the >=2x speedup verdict regressed
+    fresh_m = [
+        _rate("cascade_step", 2.1e6, k=8, schedule="0pct", engine="pallas"),
+        _verdict("lane_skip_speedup", False, k=8),
+    ]
+    _write_bench(fresh, "cascade_kernel", fresh_m)
+    rc = main(["--baseline", str(base), "--fresh", str(fresh)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "verdict regressed" in out
+    assert "cascade_kernel/lane_skip_speedup" in out
+    # both measurement kinds were compared, proving schema coverage
+    assert "compared=2" in out
+
+
+def test_cascade_kernel_keys_roundtrip_reporting_schema(tmp_path):
+    """A payload written by BenchmarkReport itself is loadable by the gate
+    (guards against schema drift between reporting.py and the gate)."""
+    from benchmarks.reporting import BenchmarkReport
+
+    rep = BenchmarkReport("cascade_kernel")
+    rep.add(
+        "cascade_step",
+        params={"k": 1, "schedule": "0pct", "engine": "pallas"},
+        updates_per_sec=1e6,
+        wall_s=1e-3,
+    )
+    rep.add("lane_skip_speedup", params={"k": 1}, speedup=3.0, passed=True)
+    path = rep.write(str(tmp_path))
+    assert os.path.basename(path) == "BENCH_cascade_kernel.json"
+    loaded = load_measurements(str(tmp_path))
+    keys = {k[:2] for k in loaded}
+    assert keys == {
+        ("cascade_kernel", "cascade_step"),
+        ("cascade_kernel", "lane_skip_speedup"),
+    }
+
+
+def test_ci_run_id_in_payload(tmp_path, monkeypatch):
+    from benchmarks.reporting import BenchmarkReport
+
+    monkeypatch.setenv("GITHUB_RUN_ID", "424242")
+    rep = BenchmarkReport("cascade_kernel")
+    rep.add("cascade_step", params={"k": 1}, updates_per_sec=1.0)
+    assert rep.payload()["ci_run_id"] == "424242"
+    monkeypatch.delenv("GITHUB_RUN_ID")
+    assert "ci_run_id" not in rep.payload()

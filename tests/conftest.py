@@ -5,8 +5,10 @@ import os
 import sys
 
 # make `_hypothesis_fallback` importable from test modules regardless of how
-# pytest inserted their own directories into sys.path
+# pytest inserted their own directories into sys.path, and the repo root so
+# `benchmarks.*` (regression gate, reporting) is testable
 sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.dirname(os.path.dirname(__file__)))
 
 import jax
 import numpy as np

@@ -1,0 +1,301 @@
+"""Parity suite for the lane-skipping Pallas cascade kernel.
+
+The load-bearing claim: ``engine="pallas"`` is *bit-identical* to the two
+existing engines — the ``lax.cond`` cascade (single) and the branchless
+vmapped cascade (packed) — across K in {1, 8}, with cascades forced and
+absent, under overflow, and on non-default semirings.  Snapshots, per-layer
+nnz, cascade counters, and overflow flags are all compared with exact
+(bitwise) equality, never allclose: that is what licenses the session to
+swap engines without changing results.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import assoc, hierarchical, multistream, semiring
+from repro.core.assoc import PAD
+from repro.kernels import common
+from repro.kernels.hier_cascade import ops as cascade_ops
+
+SPACE = 48
+SNAP_CAP = 512
+
+
+def _stream(seed, steps, k, batch, space=SPACE):
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(rng.integers(0, space, (steps, k, batch)), jnp.int32)
+    c = jnp.asarray(rng.integers(0, space, (steps, k, batch)), jnp.int32)
+    v = jnp.asarray(rng.normal(size=(steps, k, batch)), jnp.float32)
+    return r, c, v
+
+
+def _run_pallas(cuts, top, batch, R, C, V, sr):
+    k = R.shape[1]
+    h, caps = cascade_ops.init_state(k, cuts, top, batch, sr)
+    step = cascade_ops.build_step(cuts, caps, sr, donate=False)
+    for t in range(R.shape[0]):
+        h = step(h, R[t], C[t], V[t])
+    return h
+
+
+def _run_branchless(cuts, top, batch, R, C, V, sr):
+    k = R.shape[1]
+    h = multistream.init_packed(k, cuts, top_capacity=top, batch_size=batch, sr=sr)
+    step = jax.jit(
+        lambda hh, r, c, v: multistream.packed_update(
+            hh, r, c, v, cuts, sr, branchless=True
+        )
+    )
+    for t in range(R.shape[0]):
+        h = step(h, R[t], C[t], V[t])
+    return h
+
+
+def _run_cond(cuts, top, batch, R, C, V, sr):
+    """K sequential single-instance lax.cond ingests."""
+    step = jax.jit(
+        lambda hh, r, c, v: hierarchical.update_triples(hh, r, c, v, cuts, sr)
+    )
+    out = []
+    for inst in range(R.shape[1]):
+        h = hierarchical.init(cuts, top_capacity=top, batch_size=batch, sr=sr)
+        for t in range(R.shape[0]):
+            h = step(h, R[t, inst], C[t, inst], V[t, inst])
+        out.append(h)
+    return out
+
+
+def _snap(h, sr):
+    return jax.jit(
+        lambda hh: hierarchical.snapshot(hh, cap=SNAP_CAP, sr=sr)
+    )(h)
+
+
+def _assert_instance_identical(h_pal_k, h_other, sr):
+    """Instance slice of the pallas state vs a single-instance reference:
+    bitwise-equal snapshots, nnz, overflow."""
+    sp = _snap(h_pal_k, sr)
+    so = _snap(h_other, sr)
+    np.testing.assert_array_equal(np.asarray(sp.rows), np.asarray(so.rows))
+    np.testing.assert_array_equal(np.asarray(sp.cols), np.asarray(so.cols))
+    np.testing.assert_array_equal(np.asarray(sp.vals), np.asarray(so.vals))
+    assert int(sp.nnz) == int(so.nnz)
+    assert bool(sp.overflow) == bool(so.overflow)
+    assert int(hierarchical.nnz_total(h_pal_k)) == int(
+        hierarchical.nnz_total(h_other)
+    )
+    assert bool(hierarchical.overflowed(h_pal_k)) == bool(
+        hierarchical.overflowed(h_other)
+    )
+
+
+def _assert_parity(cuts, top, batch, R, C, V, sr):
+    h_pal = _run_pallas(cuts, top, batch, R, C, V, sr)
+    h_br = _run_branchless(cuts, top, batch, R, C, V, sr)
+    h_cond = _run_cond(cuts, top, batch, R, C, V, sr)
+    for inst in range(R.shape[1]):
+        pk = jax.tree.map(lambda x: x[inst], h_pal)
+        bk = jax.tree.map(lambda x: x[inst], h_br)
+        _assert_instance_identical(pk, h_cond[inst], sr)
+        _assert_instance_identical(pk, bk, sr)
+        np.testing.assert_array_equal(
+            np.asarray(h_pal.cascades[inst]), np.asarray(h_cond[inst].cascades)
+        )
+    np.testing.assert_array_equal(
+        np.asarray(h_pal.cascades), np.asarray(h_br.cascades)
+    )
+    return h_pal
+
+
+# ---------------------------------------------------------------- parity
+@pytest.mark.parametrize("k", [1, 8])
+def test_parity_cascades_absent(k):
+    """Cuts far above the stream: the fast path only — no lane ever fires."""
+    R, C, V = _stream(0, 5, k, 8)
+    h = _assert_parity((512,), 2048, 8, R, C, V, semiring.PLUS_TIMES)
+    assert int(np.asarray(h.cascades)[:, 1:].sum()) == 0
+
+
+@pytest.mark.parametrize("k", [1, 8])
+def test_parity_cascades_forced(k):
+    """Tiny cuts: every lane cascades through both cut layers."""
+    R, C, V = _stream(1, 6, k, 16)
+    h = _assert_parity((8, 32), 256, 16, R, C, V, semiring.PLUS_TIMES)
+    casc = np.asarray(h.cascades)
+    assert (casc[:, 1] > 0).all()  # every instance fired layer-1 -> 2
+    assert casc[:, 2].sum() > 0  # and the upper merge fired somewhere
+
+
+def test_parity_overflow():
+    """Top capacity smaller than the distinct-key load: the overflow flag
+    and the dropped-entry set must match the cond engine exactly."""
+    k = 2
+    R, C, V = _stream(2, 6, k, 16, space=256)
+    h = _assert_parity((8,), 12, 16, R, C, V, semiring.PLUS_TIMES)
+    assert bool(multistream.overflowed_per_instance(h).any())
+
+
+@pytest.mark.parametrize("srn", ["max.plus", "min.plus"])
+def test_parity_semirings(srn):
+    sr = semiring.get(srn)
+    R, C, V = _stream(3, 5, 2, 16)
+    _assert_parity((8, 32), 256, 16, R, C, V, sr)
+
+
+# ---------------------------------------------------------------- primitives
+def test_compact_monotone_matches_boolean_mask():
+    rng = np.random.default_rng(0)
+    for n in (8, 64, 256):
+        for frac in (0.0, 0.3, 1.0):
+            keep = jnp.asarray(rng.random(n) < frac)
+            vals = jnp.asarray(rng.integers(0, 1000, n), jnp.int32)
+            aux = jnp.asarray(rng.normal(size=n), jnp.float32)
+            got_v, got_a = common.compact_monotone(
+                (vals, aux), keep, (jnp.int32(-1), jnp.float32(0.0))
+            )
+            kn = np.asarray(keep)
+            want_v = np.asarray(vals)[kn]
+            want_a = np.asarray(aux)[kn]
+            m = want_v.shape[0]
+            np.testing.assert_array_equal(np.asarray(got_v)[:m], want_v)
+            np.testing.assert_array_equal(np.asarray(got_a)[:m], want_a)
+            assert (np.asarray(got_v)[m:] == -1).all()
+
+
+def test_pad_layers_pow2_preserves_semantics():
+    h = hierarchical.init((10,), top_capacity=100, batch_size=6)
+    h = hierarchical.update_triples(
+        h,
+        jnp.asarray([1, 2, 3, 1, 2, 3], jnp.int32),
+        jnp.asarray([4, 5, 6, 4, 5, 6], jnp.int32),
+        jnp.ones((6,), jnp.float32),
+        (10,),
+    )
+    hp = hierarchical.pad_layers_pow2(h)
+    for l, lp in zip(h.layers, hp.layers):
+        assert lp.capacity == common.next_pow2(l.capacity)
+        assert int(lp.nnz) == int(l.nnz)
+    s = hierarchical.snapshot(h, cap=64)
+    sp = hierarchical.snapshot(hp, cap=64)
+    np.testing.assert_array_equal(np.asarray(s.rows), np.asarray(sp.rows))
+    np.testing.assert_array_equal(np.asarray(s.vals), np.asarray(sp.vals))
+
+
+def test_flat_layer_state_roundtrip():
+    h = multistream.init_packed(3, (8,), top_capacity=64, batch_size=8)
+    bufs, nnz, casc, ov = multistream.flat_layer_state(h)
+    assert nnz.shape == (3, 2) and ov.shape == (3, 2)
+    h2 = multistream.from_flat_layer_state(bufs, nnz, casc, ov)
+    for a, b in zip(jax.tree.leaves(h), jax.tree.leaves(h2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_kernel_rejects_unpadded_state():
+    k = 2
+    h = multistream.init_packed(k, (8,), top_capacity=100, batch_size=8)
+    caps = hierarchical.telescoped_caps((8,), 100, 8)
+    r = jnp.zeros((k, 8), jnp.int32)
+    with pytest.raises(ValueError, match="pow2"):
+        cascade_ops.cascade_update(h, r, r, jnp.ones((k, 8)), (8,), caps)
+
+
+# ---------------------------------------------------------------- session
+def test_session_engine_pallas_matches_packed():
+    from repro import d4m
+
+    mk = lambda eng: d4m.D4MStream(
+        d4m.StreamConfig(
+            cuts=(8, 32), top_capacity=256, batch_size=16,
+            instances_per_device=2, engine=eng,
+        )
+    )
+    sp, sb = mk("pallas"), mk("packed")
+    assert sp.kind == "pallas" and sb.kind == "packed"
+    rng = np.random.default_rng(7)
+    for _ in range(6):
+        r = jnp.asarray(rng.integers(0, SPACE, 16), jnp.int32)
+        c = jnp.asarray(rng.integers(0, SPACE, 16), jnp.int32)
+        v = jnp.ones((16,), jnp.float32)
+        assert int(sp.ingest(r, c, v)) == int(sb.ingest(r, c, v)) == 0
+    A, B = sp.snapshot(cap=SNAP_CAP), sb.snapshot(cap=SNAP_CAP)
+    np.testing.assert_array_equal(np.asarray(A.rows), np.asarray(B.rows))
+    np.testing.assert_array_equal(np.asarray(A.cols), np.asarray(B.cols))
+    np.testing.assert_array_equal(np.asarray(A.vals), np.asarray(B.vals))
+    assert sp.nnz() == sb.nnz()
+    assert sp.overflowed() == sb.overflowed() is False
+    tp, tb = sp.telemetry(), sb.telemetry()
+    assert tp["engine"] == "pallas" and tb["engine"] == "packed"
+    np.testing.assert_array_equal(
+        tp["cascades_per_instance"], tb["cascades_per_instance"]
+    )
+    np.testing.assert_array_equal(
+        tp["nnz_per_instance"], tb["nnz_per_instance"]
+    )
+
+
+def test_session_pallas_ingest_stream():
+    from repro import d4m
+
+    k, steps, batch = 2, 5, 16
+    cfg = d4m.StreamConfig(
+        cuts=(8,), top_capacity=128, batch_size=batch,
+        instances_per_device=k, engine="pallas",
+    )
+    sess = d4m.D4MStream(cfg)
+    R, C, V = _stream(9, steps, k, batch)
+    trace = sess.ingest_stream(R, C, V)
+    assert trace.shape == (steps, k)
+    np.testing.assert_array_equal(
+        np.asarray(trace[-1]),
+        np.asarray(multistream.nnz_per_instance(sess.state)),
+    )
+    # scan path == loop path
+    loop = d4m.D4MStream(cfg)
+    for t in range(steps):
+        loop.update(R[t], C[t], V[t])
+    A, B = sess.snapshot(cap=SNAP_CAP), loop.snapshot(cap=SNAP_CAP)
+    np.testing.assert_array_equal(np.asarray(A.rows), np.asarray(B.rows))
+    np.testing.assert_array_equal(np.asarray(A.vals), np.asarray(B.vals))
+
+
+# ---------------------------------------------------- engine selection rules
+def test_config_pallas_requires_single_device():
+    from repro import d4m
+
+    with pytest.raises(ValueError, match="pallas"):
+        d4m.StreamConfig(
+            cuts=(8,), top_capacity=64, batch_size=8,
+            devices=2, engine="pallas",
+        ).validate()
+
+
+def test_auto_engine_env_override(monkeypatch):
+    from repro import d4m
+    from repro.d4m.config import ENGINE_ENV_VAR
+
+    cfg = d4m.StreamConfig(
+        cuts=(8,), top_capacity=64, batch_size=8, instances_per_device=4
+    )
+    monkeypatch.delenv(ENGINE_ENV_VAR, raising=False)
+    default = cfg.resolved_engine()
+    assert default == ("pallas" if jax.default_backend() == "tpu" else "packed")
+    monkeypatch.setenv(ENGINE_ENV_VAR, "pallas")
+    assert cfg.resolved_engine() == "pallas"
+    monkeypatch.setenv(ENGINE_ENV_VAR, "packed")
+    assert cfg.resolved_engine() == "packed"
+    # structurally incompatible override is ignored, not an error
+    monkeypatch.setenv(ENGINE_ENV_VAR, "single")
+    assert cfg.resolved_engine() == default
+    monkeypatch.setenv(ENGINE_ENV_VAR, "bogus")
+    with pytest.raises(ValueError, match="REPRO_D4M_ENGINE"):
+        cfg.resolved_engine()
+    # explicit engine always beats the env var
+    monkeypatch.setenv(ENGINE_ENV_VAR, "pallas")
+    explicit = d4m.StreamConfig(
+        cuts=(8,), top_capacity=64, batch_size=8,
+        instances_per_device=4, engine="packed",
+    )
+    assert explicit.resolved_engine() == "packed"
