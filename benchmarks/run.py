@@ -11,6 +11,10 @@ results (schema: ``benchmarks/reporting.py``) to ``--json-dir``; sections:
   embed           — LM integration: hierarchical sparse embedding-grad traffic
   cascade_kernel  — lane-skipping hier_cascade kernel vs the branchless
                     cascade: per-step cost vs cascade frequency x K
+  serve           — streaming ingress loop (repro.serve): sustained served
+                    rate vs raw-engine rate at K ∈ {1, 8}, with the
+                    feed_efficiency (>= 50% at K=8) verdict + a loopback
+                    TCP socket leg
 
 Select sections with ``--sections hier,scaling`` (comma-separated; CI smoke
 uses this to run only the cheap sections) or the legacy single ``--section``.
@@ -22,7 +26,7 @@ import argparse
 import os
 import sys
 
-SECTIONS = ("hier", "kernels", "embed", "scaling", "cascade_kernel")
+SECTIONS = ("hier", "kernels", "embed", "scaling", "cascade_kernel", "serve")
 
 
 def parse_sections(args: argparse.Namespace) -> set:
@@ -79,6 +83,9 @@ def main() -> None:
     if "cascade_kernel" in run:
         from benchmarks import bench_cascade_kernel
         bench_cascade_kernel.main(smoke=args.smoke)
+    if "serve" in run:
+        from benchmarks import bench_serve
+        bench_serve.main(smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -59,9 +59,16 @@ class CheckpointManager:
         self._write(step, host_state, extra or {})
 
     def save_async(self, step: int, state, extra: Optional[Dict[str, Any]] = None):
-        """Device->host copy now; serialization on a background thread."""
+        """Device->host copy now; serialization on a background thread.
+
+        The snapshot must be an owned copy, not ``np.asarray``: on the CPU
+        backend that can be a zero-copy *view* of the device buffer, and a
+        donating update step dispatched after this call mutates the buffer
+        in place — the background serializer would then write torn state
+        (caught by the serve-loop checkpoint/replay parity test).
+        """
         self.wait()  # one outstanding save at a time
-        host_state = jax.tree.map(np.asarray, state)
+        host_state = jax.tree.map(lambda x: np.array(x, copy=True), state)
 
         def work():
             try:

@@ -28,6 +28,24 @@ from .assoc import Assoc, PAD
 from .semiring import MAX_MIN, PLUS_TIMES, Semiring
 
 
+# analytics that ARE counts: only meaningful over a counting semiring whose
+# add/mul are arithmetic +/x with identities 0/1 — any other semiring would
+# silently produce garbage (e.g. max.plus has sr.one = 0.0, annihilating
+# every product in the triangle matmul)
+_COUNTING_SEMIRINGS = ("plus.times", "count")
+
+
+def _require_counting(sr: Semiring, what: str) -> None:
+    if sr.name not in _COUNTING_SEMIRINGS:
+        raise ValueError(
+            f"{what} computes a count and is only defined over the counting "
+            f"semirings {_COUNTING_SEMIRINGS}; got {sr.name!r}.  Rebuild the "
+            f"array over the boolean support first (e.g. "
+            f"undirected_view(a, sr=PLUS_TIMES)) and call with a counting "
+            f"semiring."
+        )
+
+
 def degrees(
     a: Assoc, cap: int | None = None, sr: Semiring = PLUS_TIMES
 ) -> Tuple[Assoc, Assoc]:
@@ -62,7 +80,7 @@ def undirected_view(
 
 
 def triangle_count(
-    a: Assoc, cap_sq: int, max_fanout: int
+    a: Assoc, cap_sq: int, max_fanout: int, sr: Semiring = PLUS_TIMES
 ) -> jax.Array:
     """Total triangles in the undirected simple graph supported by ``a``.
 
@@ -70,9 +88,14 @@ def triangle_count(
     support of A (element-wise multiply), then sum(C) / 6.  ``cap_sq`` bounds
     nnz(A^2) and ``max_fanout`` the join width, both explicit static-shape
     contracts (DESIGN.md section 3.1).
+
+    A triangle count is a *count*: ``sr`` must be a counting semiring
+    (``plus.times``/``count``) — anything else raises ``ValueError`` instead
+    of silently folding with the wrong identities.
     """
-    sq = assoc.matmul(a, a, cap=cap_sq, max_fanout=max_fanout)
-    masked = assoc.elem_mul(sq, a, cap=cap_sq)
+    _require_counting(sr, "triangle_count")
+    sq = assoc.matmul(a, a, cap=cap_sq, max_fanout=max_fanout, sr=sr)
+    masked = assoc.elem_mul(sq, a, cap=cap_sq, sr=sr)
     live = masked.rows != PAD
     return jnp.where(live, masked.vals, 0.0).sum() / 6.0
 
@@ -87,19 +110,34 @@ def _neighbor_set(a: Assoc, u: int, cap: int) -> Assoc:
     )
 
 
-def common_neighbors(a: Assoc, u: int, v: int, cap: int) -> jax.Array:
-    """|N(u) ∩ N(v)| via row extraction + intersection."""
+def common_neighbors(
+    a: Assoc, u: int, v: int, cap: int, sr: Semiring = PLUS_TIMES
+) -> jax.Array:
+    """|N(u) ∩ N(v)| via row extraction + intersection.
+
+    A set-size *count* — ``sr`` must be a counting semiring (see
+    :func:`triangle_count`); the neighbourhoods are collapsed to unit
+    weights, so only the support of ``a`` matters.
+    """
+    _require_counting(sr, "common_neighbors")
     inter = assoc.elem_mul(
-        _neighbor_set(a, u, cap), _neighbor_set(a, v, cap), cap=cap
+        _neighbor_set(a, u, cap), _neighbor_set(a, v, cap), cap=cap, sr=sr
     )
     return inter.nnz.astype(jnp.float32)
 
 
-def jaccard(a: Assoc, u: int, v: int, cap: int) -> jax.Array:
-    """Jaccard similarity of neighbourhoods."""
+def jaccard(
+    a: Assoc, u: int, v: int, cap: int, sr: Semiring = PLUS_TIMES
+) -> jax.Array:
+    """Jaccard similarity of neighbourhoods.
+
+    A ratio of set-size *counts* — ``sr`` must be a counting semiring (see
+    :func:`triangle_count`).
+    """
+    _require_counting(sr, "jaccard")
     ru = assoc.extract_row(a, u, cap)
     rv = assoc.extract_row(a, v, cap)
-    inter = common_neighbors(a, u, v, cap)
+    inter = common_neighbors(a, u, v, cap, sr=sr)
     union = ru.nnz + rv.nnz - inter
     return inter / jnp.maximum(union, 1.0)
 

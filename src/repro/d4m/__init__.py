@@ -6,7 +6,9 @@ One import gives the whole paper workflow:
   with a capacity planner (telescoped layer caps + memory footprint);
 * :class:`D4MStream` — the streaming session facade (auto engine selection
   across ``lax.cond`` / vmap-packed / ``shard_map`` mesh, ``update`` /
-  ``ingest`` / ``snapshot`` / ``telemetry`` / ``checkpoint`` / ``query``);
+  ``ingest`` / ``snapshot`` / ``telemetry`` / ``checkpoint`` / ``query``,
+  plus ``serve(source)`` — the :mod:`repro.serve` ingress loop — tuned by
+  an optional :class:`ServeConfig` on the stream config);
 * operator-overloaded :class:`Assoc` algebra under :func:`cap_policy`;
 * the semiring registry re-exported for convenience.
 
@@ -40,7 +42,7 @@ from repro.core.semiring import (  # noqa: F401  (re-exported registry)
 from repro.core.assoc import PAD, empty, from_triples  # noqa: F401
 
 from .algebra import Assoc, OpPolicy, cap_policy, current_policy
-from .config import CapacityPlan, StreamConfig
+from .config import CapacityPlan, ServeConfig, StreamConfig
 from .session import (
     D4MStream,
     QueryNamespace,
@@ -59,6 +61,7 @@ __all__ = [
     "OpPolicy",
     "QueryNamespace",
     "Semiring",
+    "ServeConfig",
     "StreamConfig",
     "build_update_step",
     "cap_policy",

@@ -26,6 +26,77 @@ ENGINES = ("auto", "single", "packed", "pallas", "mesh")
 # opt-in override for "auto" engine resolution (CI forces paths with it)
 ENGINE_ENV_VAR = "REPRO_D4M_ENGINE"
 
+BACKPRESSURE_POLICIES = ("block", "drop")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Knobs for the streaming ingress loop (:mod:`repro.serve`).
+
+    Lives next to :class:`StreamConfig` (not in ``repro.serve``) so the
+    session config can carry it without a ``d4m -> serve -> d4m`` import
+    cycle; every future feeding lever (core pinning, socket fan-in, TPU
+    feeding) lands here as an option rather than a new entry point.
+
+    * ``max_batch`` — records per *global* microbatch (the unit the router
+      flushes and the engine updates on).  ``None`` means the session's
+      ``batch_size``; it must never exceed it, since the per-instance slot
+      capacity is ``batch_size`` and a ``max_batch`` beyond it could make
+      the hash router drop records on skewed batches.
+    * ``max_latency_ms`` — a partial microbatch is force-flushed (padded
+      with dead slots) once its oldest record has waited this long, so a
+      trickle source still reaches the device promptly.
+    * ``queue_depth`` / ``backpressure`` — the routed-batch queue between
+      the batching thread and the device feed loop is bounded at
+      ``queue_depth``; when full, ``"block"`` stalls the producer (lossless
+      — the TCP window then pushes back on the sender) while ``"drop"``
+      discards the newest routed batch and counts every lost record.
+    * ``checkpoint_every`` — checkpoint the session every N fed microbatches
+      (requires the session's ``checkpoint_dir``); the saved cursor is the
+      count of source records already folded into the state, so a restore
+      can replay the exact tail.
+    * ``poll_interval_s`` — feed-loop poll used both as the queue-pop
+      timeout and the stale-batch flush cadence.
+    * ``drain_timeout_s`` — bound on the graceful drain (flush + feed the
+      residue + device sync) at shutdown.
+    """
+
+    max_batch: int | None = None
+    max_latency_ms: float = 50.0
+    queue_depth: int = 8
+    backpressure: str = "block"
+    checkpoint_every: int | None = None
+    poll_interval_s: float = 0.005
+    drain_timeout_s: float = 60.0
+
+    def validate(self) -> "ServeConfig":
+        if self.max_batch is not None and self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_latency_ms <= 0:
+            raise ValueError(
+                f"max_latency_ms must be positive, got {self.max_latency_ms}"
+            )
+        if self.queue_depth < 1:
+            raise ValueError(f"queue_depth must be >= 1, got {self.queue_depth}")
+        if self.backpressure not in BACKPRESSURE_POLICIES:
+            raise ValueError(
+                f"backpressure must be one of {BACKPRESSURE_POLICIES}, "
+                f"got {self.backpressure!r}"
+            )
+        if self.checkpoint_every is not None and self.checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1, got {self.checkpoint_every}"
+            )
+        if self.poll_interval_s <= 0:
+            raise ValueError(
+                f"poll_interval_s must be positive, got {self.poll_interval_s}"
+            )
+        if self.drain_timeout_s <= 0:
+            raise ValueError(
+                f"drain_timeout_s must be positive, got {self.drain_timeout_s}"
+            )
+        return self
+
 
 @dataclasses.dataclass(frozen=True)
 class StreamConfig:
@@ -58,6 +129,7 @@ class StreamConfig:
     snapshot_cap: int | None = None
     max_fanout: int = 32
     seed: int = 0
+    serve: ServeConfig | None = None
 
     # -- resolution helpers -------------------------------------------------
     @property
@@ -118,6 +190,18 @@ class StreamConfig:
             raise ValueError(f"engine='pallas' requires devices=1, got D={d}")
         if self.max_fanout < 1:
             raise ValueError(f"max_fanout must be >= 1, got {self.max_fanout}")
+        if self.serve is not None:
+            self.serve.validate()
+            if (
+                self.serve.max_batch is not None
+                and self.serve.max_batch > self.batch_size
+            ):
+                raise ValueError(
+                    f"serve.max_batch ({self.serve.max_batch}) must not exceed "
+                    f"batch_size ({self.batch_size}): the per-instance routing "
+                    f"slot capacity is batch_size, so larger global microbatches "
+                    f"could overflow a hash-skewed instance"
+                )
         self.sr  # raises KeyError on an unknown semiring name
         return self
 

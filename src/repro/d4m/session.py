@@ -44,7 +44,7 @@ from repro.core.hierarchical import HierAssoc
 from repro.core.multistream import MultiStreamEngine
 from repro.core.semiring import PLUS_TIMES, Semiring
 
-from .config import CapacityPlan, StreamConfig
+from .config import CapacityPlan, ServeConfig, StreamConfig
 
 
 # ---------------------------------------------------------------------------
@@ -582,6 +582,36 @@ class D4MStream:
             self._query = QueryNamespace(self)
         return self._query
 
+    # -- serving (wires repro.serve) -----------------------------------------
+    def serve(
+        self,
+        source,
+        serve_config: ServeConfig | None = None,
+        timeout: float | None = None,
+        **overrides,
+    ):
+        """Serve a record source into this session until it drains.
+
+        ``source`` is any :class:`repro.serve.Source` (TCP loopback socket,
+        tailed file, synthetic R-MAT traffic, pre-materialized arrays); the
+        ingress loop batches, hash-routes, and feeds it through this
+        session's engine with bounded-queue backpressure, then drains and
+        returns a :class:`repro.serve.ServeReport`.
+
+        Config resolution: explicit ``serve_config`` wins, then the
+        ``serve=`` field on this session's :class:`StreamConfig`, then
+        defaults; keyword ``overrides`` patch individual fields either way
+        (``sess.serve(src, max_latency_ms=5)``).  For manual control —
+        live telemetry, mid-stream stop — construct a
+        :class:`repro.serve.D4MServer` directly.
+        """
+        from repro.serve import D4MServer
+
+        cfg = serve_config or self.config.serve or ServeConfig()
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        return D4MServer(self, source, cfg).run(timeout=timeout)
+
     # -- fault tolerance (wires checkpoint.manager) --------------------------
     def _manager(self):
         if self._ckpt_dir is None:
@@ -608,14 +638,23 @@ class D4MStream:
         mgr = self._manager()
         mgr.wait()
         like = jax.tree.map(jnp.zeros_like, self.state)
-        shardings = None
+        state, extra = mgr.restore(like, step=step, shardings=None)
+        # The manager returns host (numpy) leaves.  They must come back as
+        # device arrays that OWN their buffers (jnp.array(copy=True), never
+        # jnp.asarray / a bare device_put): on the CPU backend those can be
+        # zero-copy views of numpy-owned memory, and the session's donating
+        # update steps would then hand XLA a buffer it doesn't own — heap
+        # corruption on the first post-restore update (caught by the serve
+        # replay test).  On the mesh the owned copy is taken per leaf inside
+        # the shard placement, so the default-device staging footprint is
+        # one leaf, never the full unsharded state.
         if self.kind == "mesh":
             sh = NamedSharding(self.mesh, P(self.engine.axes))
-            shardings = jax.tree.map(lambda _: sh, self.state)
-        state, extra = mgr.restore(like, step=step, shardings=shardings)
-        if shardings is None:
-            # manager returns host (numpy) leaves; put them back on device
-            state = jax.tree.map(jnp.asarray, state)
+            state = jax.tree.map(
+                lambda x: jax.device_put(jnp.array(x, copy=True), sh), state
+            )
+        else:
+            state = jax.tree.map(lambda x: jnp.array(x, copy=True), state)
         self.state = state
         self._snap_cache.clear()
         return extra

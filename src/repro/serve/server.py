@@ -1,0 +1,292 @@
+"""The serve loop: sources -> router -> engine updates, with graceful drain.
+
+:class:`D4MServer` turns a :class:`repro.d4m.D4MStream` from a pull-style
+library into a served system.  Three concurrent stages:
+
+* the **reader thread** drains ``source.chunks()`` into the
+  :class:`~repro.serve.router.MicrobatchRouter` (parse + host-side hash
+  routing happen here, off the device path);
+* the **feed thread** pops routed microbatches and dispatches engine
+  ``update`` steps.  JAX dispatch is asynchronous, so the loop is naturally
+  double-buffered: while the device executes batch *t*, the host is already
+  parsing/routing batch *t+1* and dispatching *t+2* — the feed loop blocks
+  on device completion only at checkpoints and at drain;
+* the caller's thread reads :meth:`telemetry` (host counters only — it
+  never touches the donated device state while updates are in flight).
+
+Shutdown is a graceful drain by default: stop the source, flush the
+router's residue (PAD-padded partial batch), feed everything queued, sync
+the device, take a final checkpoint when checkpointing is configured, and
+return a :class:`ServeReport`.  ``stop(drain=False)`` aborts instead —
+queued batches are discarded (counted, never silent) and the state is left
+at the last completed update, which is exactly what the checkpoint/restore
+replay test recovers from.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.d4m.config import ServeConfig
+
+from .router import DRAIN, MicrobatchRouter
+from .sources import Source
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Outcome of one serve run (final counters; see ``telemetry`` for the
+    full dict, including the session's device-side counters post-drain)."""
+
+    drained: bool
+    records_in: int
+    records_fed: int
+    batches_fed: int
+    records_dropped: int
+    blocked_events: int
+    malformed: int
+    wall_s: float
+    ingest_rate: float
+    checkpoints: List[Dict[str, int]]
+    telemetry: Dict[str, Any]
+
+
+class D4MServer:
+    """Serve one source into one session.  See the module docstring.
+
+    The session must be exclusively owned by the server while it runs: the
+    engine state is donated on every update, so no other thread may touch
+    ``session.state`` (including snapshots/telemetry) until the server
+    stops.
+    """
+
+    def __init__(self, session, source: Source, config: ServeConfig | None = None):
+        self.session = session
+        self.source = source
+        self.config = (config or ServeConfig()).validate()
+        if (
+            self.config.max_batch is not None
+            and self.config.max_batch > session.batch_size
+        ):
+            raise ValueError(
+                f"max_batch ({self.config.max_batch}) exceeds the session "
+                f"batch_size ({session.batch_size}) — the routing slot capacity"
+            )
+        if self.config.checkpoint_every is not None and session._ckpt_dir is None:
+            raise ValueError(
+                "checkpoint_every is set but the session has no checkpoint_dir"
+            )
+        self.router = MicrobatchRouter(
+            None if session.kind == "single" else session.n_instances,
+            slot_cap=session.batch_size,
+            max_batch=self.config.max_batch,
+            max_latency_ms=self.config.max_latency_ms,
+            queue_depth=self.config.queue_depth,
+            backpressure=self.config.backpressure,
+            zero=session.sr.zero,
+            val_dtype=np.dtype(session.dtype),
+        )
+        self._reader: Optional[threading.Thread] = None
+        self._feeder: Optional[threading.Thread] = None
+        self._abort = threading.Event()
+        self._started = False
+        self._done = threading.Event()
+        self._error: Optional[BaseException] = None
+        self._t0: Optional[float] = None
+        self._t1: Optional[float] = None
+        self.batches_fed = 0
+        self.records_fed = 0
+        self.records_discarded = 0  # queued batches thrown away by an abort
+        self.checkpoints: List[Dict[str, int]] = []
+        self._drained = False
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "D4MServer":
+        if self._started:
+            return self
+        self._started = True
+        self.source.start()
+        self._t0 = time.monotonic()
+        self._reader = threading.Thread(
+            target=self._read_loop, name="d4m-serve-reader", daemon=True
+        )
+        self._feeder = threading.Thread(
+            target=self._feed_loop, name="d4m-serve-feeder", daemon=True
+        )
+        self._reader.start()
+        self._feeder.start()
+        return self
+
+    def join(self, timeout: Optional[float] = None) -> bool:
+        """Wait for the stream to end and the drain to complete."""
+        done = self._done.wait(timeout)
+        if done:
+            self._reader.join()
+            self._feeder.join()
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
+        return done
+
+    def run(self, timeout: Optional[float] = None) -> ServeReport:
+        """Start, serve to exhaustion, drain, and report (the blocking
+        convenience wrapper ``D4MStream.serve`` uses)."""
+        self.start()
+        if not self.join(timeout):
+            self.stop(drain=True)
+        return self.report()
+
+    def stop(self, drain: bool = True, timeout: Optional[float] = None) -> None:
+        """Stop serving.  ``drain=True`` feeds everything already received;
+        ``drain=False`` aborts after the in-flight update."""
+        if not self._started:
+            return
+        if not drain:
+            self._abort.set()
+        self.source.stop()
+        self.join(
+            timeout if timeout is not None else self.config.drain_timeout_s
+        )
+
+    # -- the two loops -------------------------------------------------------
+    def _read_loop(self) -> None:
+        try:
+            for rows, cols, vals in self.source.chunks():
+                if self._abort.is_set():
+                    break
+                self.router.push(rows, cols, vals)
+        except BaseException as e:  # pragma: no cover - surfaced via join()
+            self._error = self._error or e
+        finally:
+            self.router.close(drain=not self._abort.is_set())
+
+    def _feed_loop(self) -> None:
+        try:
+            while True:
+                item = self.router.pop(timeout=self.config.poll_interval_s)
+                if item is DRAIN:
+                    break
+                if item is None:
+                    self.router.flush_if_stale()
+                    continue
+                if self._abort.is_set():
+                    self.records_discarded += int(item[3])
+                    continue  # keep popping so a blocked producer unwinds
+                rows, cols, vals, live = item
+                self._dispatch(rows, cols, vals)
+                self.batches_fed += 1
+                self.records_fed += int(live)
+                every = self.config.checkpoint_every
+                if every is not None and self.batches_fed % every == 0:
+                    self._checkpoint()
+            if not self._abort.is_set():
+                self._drained = True
+            jax.block_until_ready(self.session.state)
+            self._t1 = time.monotonic()
+            if self.config.checkpoint_every is not None:
+                if self._drained:
+                    self._checkpoint(final=True)
+                else:
+                    # aborted: no new checkpoint, but let the last async
+                    # save publish so a restart sees it
+                    self.session.wait_checkpoint()
+        except BaseException as e:
+            self._error = self._error or e
+            self._t1 = self._t1 or time.monotonic()
+            # unwind the producer side: stop the source and keep draining the
+            # queue until the reader has published DRAIN — a blocked push (or
+            # a throttled source's quiet gap) must not strand the reader, or
+            # the subsequent join() would hang instead of raising the error
+            self._abort.set()
+            try:
+                self.source.stop()
+            except Exception:
+                pass
+            while True:
+                item = self.router.pop(timeout=0.2)
+                if item is DRAIN:
+                    break
+                if item is None and not (
+                    self._reader is not None and self._reader.is_alive()
+                ):
+                    break  # reader already gone; nothing more can arrive
+        finally:
+            self._done.set()
+
+    def _dispatch(self, rows, cols, vals) -> None:
+        s = self.session
+        rows, cols, vals = jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(vals)
+        if s.kind == "mesh":
+            rows, cols, vals = s.shard_stream(rows, cols, vals)
+        s.update(rows, cols, vals)
+
+    def _checkpoint(self, final: bool = False) -> None:
+        # save_async's device->host copy synchronizes every dispatched
+        # update, so the cursor is exact: records_fed source records are in
+        # the saved state
+        cursor = self.records_fed
+        self.session.checkpoint(
+            step=self.batches_fed,
+            extra={
+                "cursor": int(cursor),
+                "batches_fed": int(self.batches_fed),
+                "final": bool(final),
+            },
+        )
+        self.checkpoints.append({"step": self.batches_fed, "cursor": int(cursor)})
+        if final:
+            self.session.wait_checkpoint()
+
+    # -- observability -------------------------------------------------------
+    def telemetry(self) -> Dict[str, Any]:
+        """Live host-side counters; safe to call from any thread while the
+        server runs (never touches the donated device state)."""
+        now = self._t1 or time.monotonic()
+        wall = max(now - self._t0, 1e-9) if self._t0 is not None else 0.0
+        c = self.router.counters()
+        return {
+            "engine": self.session.kind,
+            "n_instances": self.session.n_instances,
+            "records_in": c["records_in"],
+            "records_fed": self.records_fed,
+            "batches_fed": self.batches_fed,
+            "records_dropped": c["dropped_records"] + self.records_discarded,
+            "routing_dropped": c["routing_dropped"],
+            "blocked_events": c["blocked_events"],
+            "queue_depth": c["queue_depth"],
+            "pending": c["pending"],
+            "malformed": getattr(self.source, "malformed", 0),
+            "source_records": getattr(self.source, "records_out", 0),
+            "wall_s": wall,
+            "ingest_rate": self.records_fed / wall if wall else 0.0,
+            "checkpoints": list(self.checkpoints),
+            "drained": self._drained,
+        }
+
+    def report(self) -> ServeReport:
+        """Final report; call after :meth:`join`/:meth:`run`/:meth:`stop`.
+        Includes the session's device-side counters (nnz, cascades) — the
+        state is quiescent once the feed loop has exited."""
+        if not self._done.is_set():
+            raise RuntimeError("report() before the server finished; join() first")
+        tel = self.telemetry()
+        tel["session"] = self.session.telemetry()
+        return ServeReport(
+            drained=self._drained,
+            records_in=tel["records_in"],
+            records_fed=self.records_fed,
+            batches_fed=self.batches_fed,
+            records_dropped=tel["records_dropped"],
+            blocked_events=tel["blocked_events"],
+            malformed=tel["malformed"],
+            wall_s=tel["wall_s"],
+            ingest_rate=tel["ingest_rate"],
+            checkpoints=list(self.checkpoints),
+            telemetry=tel,
+        )

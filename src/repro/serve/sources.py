@@ -1,0 +1,375 @@
+"""Pluggable record sources for the streaming ingress loop.
+
+A *source* produces triple records ``(rows, cols, vals)`` as host numpy
+chunks; the :class:`~repro.serve.server.D4MServer` runs one reader thread
+per source that drains ``chunks()`` into the microbatch router.  Four
+implementations:
+
+* :class:`TCPSource` — a loopback/LAN TCP listener (text or binary wire
+  format, multiple concurrent producers multiplexed with ``selectors``);
+* :class:`FileTailSource` — a newline-delimited triple file, optionally
+  tailed (``follow=True``) like the paper's feeder processes reading files
+  landed by collectors;
+* :class:`RMATSource` — synthetic Graph500 R-MAT traffic (reuses
+  :mod:`repro.data.rmat`), the benchmark/load-test generator;
+* :class:`ArraySource` — pre-materialized host arrays replayed in chunks
+  (deterministic tests, replay-from-checkpoint).
+
+The contract is intentionally tiny::
+
+    source.start()                   # idempotent; bind sockets, open files
+    for rows, cols, vals in source.chunks():
+        ...                          # numpy int32/int32/float32, same length
+    source.stop()                    # idempotent; also ends chunks()
+
+``chunks()`` terminates when the stream is genuinely over (file EOF,
+generator exhausted, all TCP producers disconnected) or when ``stop()`` is
+called from another thread.  Sources never block forever: every wait is a
+short poll against the stop flag.
+"""
+from __future__ import annotations
+
+import os
+import selectors
+import socket
+import threading
+import time
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+from . import wire
+
+Chunk = Tuple[np.ndarray, np.ndarray, np.ndarray]
+
+
+class Source:
+    """Base class: stop-flag plumbing + counters shared by every source."""
+
+    def __init__(self) -> None:
+        self._stop = threading.Event()
+        self.records_out = 0  # records yielded so far
+        self.malformed = 0  # records/lines that failed to parse (skipped)
+
+    def start(self) -> "Source":
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    @property
+    def stopped(self) -> bool:
+        return self._stop.is_set()
+
+    def chunks(self) -> Iterator[Chunk]:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def _count(self, chunk: Chunk) -> Chunk:
+        self.records_out += int(chunk[0].shape[0])
+        return chunk
+
+
+# ---------------------------------------------------------------------------
+# TCP loopback/LAN listener
+# ---------------------------------------------------------------------------
+
+class TCPSource(Source):
+    """Listen for triple records on a TCP socket.
+
+    ``port=0`` binds an ephemeral port (read :attr:`port` after
+    :meth:`start`).  All accepted connections are multiplexed on one
+    ``selectors`` loop inside :meth:`chunks`, each with its own reassembly
+    buffer, so records interleave across producers but never tear within
+    one.
+
+    End-of-stream: with ``linger=False`` (default) the stream ends once at
+    least one producer connected and all of them have disconnected — the
+    natural shape for examples, tests, and batch feeds.  ``linger=True``
+    keeps listening until :meth:`stop` (a long-lived server).
+    """
+
+    def __init__(
+        self,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        encoding: str = "text",
+        linger: bool = False,
+        poll_s: float = 0.05,
+        recv_bytes: int = 1 << 16,
+    ):
+        super().__init__()
+        self.host = host
+        self.port = int(port)
+        self.encoding = encoding
+        self._decode = wire.decoder_for(encoding)
+        self.linger = linger
+        self.poll_s = float(poll_s)
+        self.recv_bytes = int(recv_bytes)
+        self._listener: Optional[socket.socket] = None
+        self.connections_seen = 0
+
+    def start(self) -> "TCPSource":
+        if self._listener is None:
+            sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+            sock.bind((self.host, self.port))
+            sock.listen(16)
+            sock.setblocking(False)
+            self._listener = sock
+            self.port = sock.getsockname()[1]
+        return self
+
+    def stop(self) -> None:
+        super().stop()
+
+    def chunks(self) -> Iterator[Chunk]:
+        self.start()
+        sel = selectors.DefaultSelector()
+        sel.register(self._listener, selectors.EVENT_READ, data=None)
+        buffers: dict[socket.socket, bytes] = {}
+        try:
+            while not self.stopped:
+                if (
+                    not self.linger
+                    and self.connections_seen > 0
+                    and not buffers
+                ):
+                    break  # every producer came and went: stream over
+                for key, _ in sel.select(timeout=self.poll_s):
+                    if key.data is None:  # the listener
+                        try:
+                            conn, _ = self._listener.accept()
+                        except OSError:
+                            continue
+                        conn.setblocking(False)
+                        sel.register(conn, selectors.EVENT_READ, data=b"conn")
+                        buffers[conn] = b""
+                        self.connections_seen += 1
+                        continue
+                    conn = key.fileobj
+                    try:
+                        data = conn.recv(self.recv_bytes)
+                    except BlockingIOError:
+                        continue
+                    except OSError:
+                        data = b""
+                    if data:
+                        buffers[conn] += data
+                        chunk = self._drain(buffers, conn, final=False)
+                        if chunk is not None:
+                            yield chunk
+                    else:  # orderly shutdown from the peer
+                        chunk = self._drain(buffers, conn, final=True)
+                        sel.unregister(conn)
+                        conn.close()
+                        del buffers[conn]
+                        if chunk is not None:
+                            yield chunk
+            # stop() during live connections: flush whatever already arrived
+            for conn in list(buffers):
+                chunk = self._drain(buffers, conn, final=True)
+                if chunk is not None:
+                    yield chunk
+        finally:
+            for conn in buffers:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+            sel.close()
+            self._listener.close()
+            self._listener = None
+
+    def _drain(self, buffers, conn, final: bool) -> Optional[Chunk]:
+        buf = buffers[conn]
+        if final and self.encoding == "text" and buf and not buf.endswith(b"\n"):
+            buf += b"\n"  # a last record without its newline is still a record
+        try:
+            (r, c, v), leftover, bad = self._decode(buf)
+        except ValueError:
+            # desynchronized binary stream: drop the connection's buffer
+            self.malformed += 1
+            buffers[conn] = b""
+            return None
+        if final and leftover:
+            # a producer died mid-frame: the incomplete tail is lost — count
+            # it so the shortfall is diagnosable from telemetry
+            bad += 1
+            leftover = b""
+        self.malformed += bad
+        buffers[conn] = leftover
+        if r.shape[0] == 0:
+            return None
+        return self._count((r, c, v))
+
+
+# ---------------------------------------------------------------------------
+# newline-delimited file, with tailing
+# ---------------------------------------------------------------------------
+
+class FileTailSource(Source):
+    """Read a triple file; with ``follow=True`` keep tailing for appends.
+
+    ``follow=False`` yields the file once and ends at EOF.  ``follow=True``
+    polls for growth every ``poll_s`` (collector processes appending to a
+    landing file) until :meth:`stop` is called; a truncation (e.g. log
+    rotation) rewinds to the new end-of-file.
+    """
+
+    def __init__(
+        self,
+        path: str,
+        encoding: str = "text",
+        follow: bool = False,
+        poll_s: float = 0.05,
+        chunk_bytes: int = 1 << 16,
+    ):
+        super().__init__()
+        self.path = path
+        self.encoding = encoding
+        self._decode = wire.decoder_for(encoding)
+        self.follow = follow
+        self.poll_s = float(poll_s)
+        self.chunk_bytes = int(chunk_bytes)
+
+    def chunks(self) -> Iterator[Chunk]:
+        buf = b""
+        with open(self.path, "rb") as f:
+            while not self.stopped:
+                data = f.read(self.chunk_bytes)
+                if not data:
+                    if not self.follow:
+                        break
+                    pos = f.tell()
+                    try:
+                        if os.path.getsize(self.path) < pos:
+                            f.seek(0, os.SEEK_END)  # truncated under us
+                    except OSError:
+                        pass
+                    time.sleep(self.poll_s)
+                    continue
+                buf += data
+                chunk = self._parse(buf, final=False)
+                buf = self._leftover
+                if chunk is not None:
+                    yield chunk
+        chunk = self._parse(buf, final=True)
+        if chunk is not None:
+            yield chunk
+
+    def _parse(self, buf: bytes, final: bool) -> Optional[Chunk]:
+        if final and self.encoding == "text" and buf and not buf.endswith(b"\n"):
+            buf += b"\n"
+        (r, c, v), self._leftover, bad = self._decode(buf)
+        if final and self._leftover:
+            bad += 1  # truncated final frame: counted, not silently dropped
+            self._leftover = b""
+        self.malformed += bad
+        if r.shape[0] == 0:
+            return None
+        return self._count((r, c, v))
+
+
+# ---------------------------------------------------------------------------
+# synthetic R-MAT traffic generator
+# ---------------------------------------------------------------------------
+
+class RMATSource(Source):
+    """Graph500-style power-law edge traffic (paper Section IV's workload).
+
+    Generates ``total_records`` edges in ``chunk_records`` groups with
+    :func:`repro.data.rmat.rmat_edges` (deterministic in ``seed``).
+    ``pregenerate=True`` materializes every chunk on the host up front so a
+    serving benchmark measures the feed loop, not the generator;
+    ``throttle_s`` sleeps between chunks to emulate a paced producer.
+    """
+
+    def __init__(
+        self,
+        total_records: int,
+        chunk_records: int = 4096,
+        scale: int = 14,
+        seed: int = 0,
+        pregenerate: bool = False,
+        throttle_s: float = 0.0,
+    ):
+        super().__init__()
+        if total_records < 1 or chunk_records < 1:
+            raise ValueError(
+                f"need positive sizes, got total={total_records} "
+                f"chunk={chunk_records}"
+            )
+        self.total_records = int(total_records)
+        self.chunk_records = int(chunk_records)
+        self.scale = int(scale)
+        self.seed = int(seed)
+        self.throttle_s = float(throttle_s)
+        self._pre: Optional[list] = None
+        if pregenerate:
+            self._pre = list(self._generate())
+
+    def _generate(self) -> Iterator[Chunk]:
+        import jax
+
+        from repro.data import rmat
+
+        key = jax.random.PRNGKey(self.seed)
+        remaining = self.total_records
+        while remaining > 0:
+            key, sub = jax.random.split(key)
+            n = min(self.chunk_records, remaining)
+            # fixed-size generation (jit cache) then host-side trim
+            s, d = rmat.rmat_edges(sub, self.chunk_records, self.scale)
+            yield (
+                np.asarray(s[:n], np.int32),
+                np.asarray(d[:n], np.int32),
+                np.ones((n,), np.float32),
+            )
+            remaining -= n
+
+    def chunks(self) -> Iterator[Chunk]:
+        it = iter(self._pre) if self._pre is not None else self._generate()
+        for chunk in it:
+            if self.stopped:
+                break
+            if self.throttle_s:
+                time.sleep(self.throttle_s)
+            yield self._count(chunk)
+
+
+# ---------------------------------------------------------------------------
+# pre-materialized arrays (tests, replay)
+# ---------------------------------------------------------------------------
+
+class ArraySource(Source):
+    """Replay host arrays in fixed-size chunks (deterministic feeds)."""
+
+    def __init__(
+        self,
+        rows,
+        cols,
+        vals,
+        chunk_records: int = 4096,
+        throttle_s: float = 0.0,
+    ):
+        super().__init__()
+        self.rows = np.asarray(rows, np.int32).ravel()
+        self.cols = np.asarray(cols, np.int32).ravel()
+        self.vals = np.asarray(vals, np.float32).ravel()
+        if not (self.rows.shape == self.cols.shape == self.vals.shape):
+            raise ValueError("triple columns disagree")
+        if chunk_records < 1:
+            raise ValueError(f"chunk_records must be >= 1, got {chunk_records}")
+        self.chunk_records = int(chunk_records)
+        self.throttle_s = float(throttle_s)
+
+    def chunks(self) -> Iterator[Chunk]:
+        for lo in range(0, self.rows.shape[0], self.chunk_records):
+            if self.stopped:
+                break
+            if self.throttle_s:
+                time.sleep(self.throttle_s)
+            hi = lo + self.chunk_records
+            yield self._count(
+                (self.rows[lo:hi], self.cols[lo:hi], self.vals[lo:hi])
+            )

@@ -1,0 +1,207 @@
+"""Wire formats for triple records ``(row, col, val)`` and a loopback client.
+
+Two encodings, both newline/frame delimited so they survive arbitrary TCP
+segmentation:
+
+* ``"text"`` — D4M's native triple-store form: one ASCII line per record,
+  ``row<TAB>col<TAB>val\\n`` (any whitespace separator is accepted on the
+  read side).  Human-greppable, what the tailing file source reads.
+* ``"binary"`` — framed columnar batches for high-rate feeds: an 8-byte
+  header (magic ``D4MB`` + little-endian uint32 record count) followed by
+  ``count`` int32 rows, ``count`` int32 cols, ``count`` float32 vals.
+  Columnar so both ends move whole numpy arrays without a per-record loop.
+
+Decoders are incremental: each returns ``(records, leftover)`` where
+``leftover`` is the tail of the buffer that is not yet a complete
+line/frame — callers keep it and prepend the next socket read.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+from typing import Tuple
+
+import numpy as np
+
+ENCODINGS = ("text", "binary")
+
+BINARY_MAGIC = b"D4MB"
+_HEADER = struct.Struct("<4sI")  # magic, record count
+
+Records = Tuple[np.ndarray, np.ndarray, np.ndarray]  # rows i32, cols i32, vals f32
+
+
+def _empty() -> Records:
+    return (
+        np.zeros((0,), np.int32),
+        np.zeros((0,), np.int32),
+        np.zeros((0,), np.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# text encoding
+# ---------------------------------------------------------------------------
+
+def encode_text(rows, cols, vals) -> bytes:
+    """Serialize triples as newline-delimited ``row\\tcol\\tval`` lines."""
+    rows = np.asarray(rows).ravel()
+    cols = np.asarray(cols).ravel()
+    vals = np.asarray(vals).ravel()
+    out = []
+    for r, c, v in zip(rows.tolist(), cols.tolist(), vals.tolist()):
+        out.append(f"{r}\t{c}\t{v:g}\n")
+    return "".join(out).encode("ascii")
+
+
+def decode_text(buf: bytes) -> Tuple[Records, bytes, int]:
+    """Parse every complete line in ``buf``.
+
+    Returns ``((rows, cols, vals), leftover, malformed)`` — ``leftover`` is
+    the trailing partial line, ``malformed`` counts lines that did not parse
+    as three numeric fields (skipped, never fatal: one bad record must not
+    poison a long-lived feed).
+    """
+    cut = buf.rfind(b"\n")
+    if cut < 0:
+        return _empty(), buf, 0
+    block, leftover = buf[: cut + 1], buf[cut + 1 :]
+    # framing is validated PER LINE, always: a flat block.split() could
+    # re-frame a short line's fields into the next record (e.g.
+    # "1\t2\n3\t4\t5\t6\n" is two malformed lines, not two records).
+    # Only the numeric conversion is vectorized.
+    parts = [p for p in (ln.split() for ln in block.splitlines()) if p]
+    good = [p for p in parts if len(p) == 3]
+    malformed = len(parts) - len(good)
+    if not good:
+        return _empty(), leftover, malformed
+    try:
+        flat = np.array([t for p in good for t in p])
+        return (
+            (
+                flat[0::3].astype(np.int32),
+                flat[1::3].astype(np.int32),
+                flat[2::3].astype(np.float32),
+            ),
+            leftover,
+            malformed,
+        )
+    except ValueError:
+        pass  # non-numeric garbage in a 3-field line; re-parse per line
+    rows, cols, vals = [], [], []
+    for p in good:
+        try:
+            r, c, v = int(p[0]), int(p[1]), float(p[2])
+        except ValueError:
+            malformed += 1
+            continue
+        rows.append(r)
+        cols.append(c)
+        vals.append(v)
+    return (
+        (
+            np.asarray(rows, np.int32),
+            np.asarray(cols, np.int32),
+            np.asarray(vals, np.float32),
+        ),
+        leftover,
+        malformed,
+    )
+
+
+# ---------------------------------------------------------------------------
+# binary encoding
+# ---------------------------------------------------------------------------
+
+def encode_binary(rows, cols, vals) -> bytes:
+    """One framed columnar batch (see module docstring for the layout)."""
+    rows = np.ascontiguousarray(np.asarray(rows).ravel(), np.int32)
+    cols = np.ascontiguousarray(np.asarray(cols).ravel(), np.int32)
+    vals = np.ascontiguousarray(np.asarray(vals).ravel(), np.float32)
+    if not (rows.shape == cols.shape == vals.shape):
+        raise ValueError(
+            f"triple columns disagree: {rows.shape} {cols.shape} {vals.shape}"
+        )
+    header = _HEADER.pack(BINARY_MAGIC, rows.shape[0])
+    return header + rows.tobytes() + cols.tobytes() + vals.tobytes()
+
+
+def decode_binary(buf: bytes) -> Tuple[Records, bytes, int]:
+    """Parse every complete frame in ``buf``; returns like :func:`decode_text`.
+
+    A bad magic raises ``ValueError`` — unlike one mangled text line, a
+    desynchronized binary stream cannot be resynchronized safely.
+    """
+    rows, cols, vals = [], [], []
+    off = 0
+    n = len(buf)
+    while n - off >= _HEADER.size:
+        magic, count = _HEADER.unpack_from(buf, off)
+        if magic != BINARY_MAGIC:
+            raise ValueError(
+                f"bad frame magic {magic!r} at offset {off}; binary feed "
+                f"desynchronized"
+            )
+        body = 12 * count  # 4B row + 4B col + 4B val per record
+        if n - off - _HEADER.size < body:
+            break
+        start = off + _HEADER.size
+        rows.append(np.frombuffer(buf, np.int32, count, start))
+        cols.append(np.frombuffer(buf, np.int32, count, start + 4 * count))
+        vals.append(np.frombuffer(buf, np.float32, count, start + 8 * count))
+        off = start + body
+    if not rows:
+        return _empty(), buf[off:], 0
+    return (
+        (np.concatenate(rows), np.concatenate(cols), np.concatenate(vals)),
+        buf[off:],
+        0,
+    )
+
+
+def encode(rows, cols, vals, encoding: str = "text") -> bytes:
+    if encoding == "text":
+        return encode_text(rows, cols, vals)
+    if encoding == "binary":
+        return encode_binary(rows, cols, vals)
+    raise ValueError(f"encoding must be one of {ENCODINGS}, got {encoding!r}")
+
+
+def decoder_for(encoding: str):
+    if encoding == "text":
+        return decode_text
+    if encoding == "binary":
+        return decode_binary
+    raise ValueError(f"encoding must be one of {ENCODINGS}, got {encoding!r}")
+
+
+# ---------------------------------------------------------------------------
+# loopback client
+# ---------------------------------------------------------------------------
+
+def send_triples(
+    host: str,
+    port: int,
+    rows,
+    cols,
+    vals,
+    encoding: str = "text",
+    chunk_records: int = 4096,
+    timeout_s: float = 30.0,
+) -> int:
+    """Stream a triple batch to a :class:`~repro.serve.sources.TCPSource`.
+
+    Splits into ``chunk_records``-sized sends so the receiver interleaves
+    parsing with the transfer; returns the number of records sent.  The
+    write path inherits TCP flow control, which is how the server's
+    ``"block"`` backpressure policy ultimately reaches the producer.
+    """
+    rows = np.asarray(rows).ravel()
+    cols = np.asarray(cols).ravel()
+    vals = np.asarray(vals).ravel()
+    n = rows.shape[0]
+    with socket.create_connection((host, port), timeout=timeout_s) as sock:
+        for lo in range(0, n, chunk_records):
+            hi = min(lo + chunk_records, n)
+            sock.sendall(encode(rows[lo:hi], cols[lo:hi], vals[lo:hi], encoding))
+    return int(n)

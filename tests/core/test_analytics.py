@@ -92,6 +92,38 @@ def test_reachability_semiring_roundtrip(graph, srn):
             assert got == want, (srn, u, v, got, want)
 
 
+@pytest.mark.parametrize("srn", ["max.plus", "min.plus", "max.min", "min.max"])
+def test_counting_analytics_reject_non_counting_semirings(graph, srn):
+    """Satellite guard: triangle_count / common_neighbors / jaccard are
+    counts — silently folding them under e.g. max.plus (whose sr.one = 0.0
+    annihilates every product) used to produce garbage; now it raises."""
+    _, a = graph
+    sr = semiring.get(srn)
+    with pytest.raises(ValueError, match="counting"):
+        analytics.triangle_count(a, cap_sq=4096, max_fanout=24, sr=sr)
+    with pytest.raises(ValueError, match="counting"):
+        analytics.common_neighbors(a, 0, 1, cap=64, sr=sr)
+    with pytest.raises(ValueError, match="counting"):
+        analytics.jaccard(a, 0, 1, cap=64, sr=sr)
+
+
+@pytest.mark.parametrize("srn", ["plus.times", "count"])
+def test_counting_analytics_accept_counting_semirings(graph, srn):
+    """Both counting semirings (identical arithmetic) pass the guard and
+    agree with the default."""
+    g, a = graph
+    sr = semiring.get(srn)
+    want = sum(nx.triangles(g).values()) / 3
+    got = float(analytics.triangle_count(a, cap_sq=4096, max_fanout=24, sr=sr))
+    assert got == want
+    nodes = list(g.nodes)
+    u, v = nodes[0], nodes[1]
+    nu, nv = set(g.neighbors(u)), set(g.neighbors(v))
+    assert float(analytics.common_neighbors(a, u, v, cap=64, sr=sr)) == len(nu & nv)
+    want_j = len(nu & nv) / max(len(nu | nv), 1)
+    assert abs(float(analytics.jaccard(a, u, v, cap=64, sr=sr)) - want_j) < 1e-6
+
+
 @pytest.mark.parametrize("srn", ["plus.times", "max.plus"])
 def test_undirected_view_semiring_roundtrip(graph, srn):
     """undirected_view's collapsed weights/pads must be sr.one/sr.zero

@@ -1,0 +1,145 @@
+"""Router layer: host routing must mirror the device router bit-for-bit,
+and the microbatcher's flush/backpressure accounting must be lossless."""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import multistream
+from repro.core.assoc import PAD
+from repro.serve.router import DRAIN, MicrobatchRouter, route_numpy
+
+
+def _random_batch(rng, n, space=200, dead_frac=0.2):
+    r = rng.integers(0, space, n).astype(np.int32)
+    c = rng.integers(0, space, n).astype(np.int32)
+    v = rng.random(n).astype(np.float32)
+    dead = rng.random(n) < dead_frac
+    r[dead] = PAD
+    return r, c, v
+
+
+@pytest.mark.parametrize("k", [1, 2, 8, 13])
+def test_route_numpy_bit_identical_to_device_router(rng, k):
+    for _ in range(4):
+        r, c, v = _random_batch(rng, 96)
+        br, bc, bv, d = multistream.route_to_instances(
+            jnp.asarray(r), jnp.asarray(c), jnp.asarray(v), k, 96
+        )
+        nr, nc, nv, nd = route_numpy(r, c, v, k, 96)
+        np.testing.assert_array_equal(np.asarray(br), nr)
+        np.testing.assert_array_equal(np.asarray(bc), nc)
+        np.testing.assert_array_equal(np.asarray(bv), nv)
+        assert int(d) == nd
+
+
+def test_route_numpy_slot_overflow_counted(rng):
+    # every record hashes to SOME instance; with slot_cap < B/k collisions
+    # must drop (counted), matching the device router exactly
+    r = np.zeros((32,), np.int32)
+    c = np.zeros((32,), np.int32)  # identical key -> one owner
+    v = np.ones((32,), np.float32)
+    nr, nc, nv, nd = route_numpy(r, c, v, 4, 8)
+    br, bc, bv, d = multistream.route_to_instances(
+        jnp.asarray(r), jnp.asarray(c), jnp.asarray(v), 4, 8
+    )
+    assert nd == int(d) == 32 - 8
+
+
+def test_flush_on_full_batch_and_drain_padding():
+    router = MicrobatchRouter(n_instances=None, slot_cap=16, max_batch=16)
+    r = np.arange(40, dtype=np.int32)
+    router.push(r, r, np.ones(40, np.float32))
+    assert router.batches_out == 2 and router.pending == 8
+    router.close(drain=True)
+    seen = []
+    while True:
+        item = router.pop(timeout=1.0)
+        if item is DRAIN:
+            break
+        seen.append(item)
+    assert len(seen) == 3
+    # full batches carry the records in arrival order
+    np.testing.assert_array_equal(seen[0][0], np.arange(16, dtype=np.int32))
+    np.testing.assert_array_equal(seen[1][0], np.arange(16, 32, dtype=np.int32))
+    # the drain residue is PAD-padded and its live count is exact
+    rows, _, vals, live = seen[2]
+    assert live == 8
+    np.testing.assert_array_equal(rows[:8], np.arange(32, 40, dtype=np.int32))
+    assert (rows[8:] == PAD).all() and (vals[8:] == 0.0).all()
+    assert router.records_out == 40 == router.records_in
+
+
+def test_latency_flush_emits_partial_batch():
+    router = MicrobatchRouter(
+        n_instances=4, slot_cap=32, max_batch=32, max_latency_ms=1.0
+    )
+    r = np.arange(5, dtype=np.int32)
+    router.push(r, r, np.ones(5, np.float32))
+    assert router.pop(timeout=0.01) is None  # not full: nothing flushed yet
+    time.sleep(0.01)
+    assert router.flush_if_stale()
+    rows, cols, vals, live = router.pop(timeout=1.0)
+    assert rows.shape == (4, 32) and live == 5
+    assert int((rows != PAD).sum()) == 5
+
+
+def test_backpressure_drop_counts_every_record():
+    router = MicrobatchRouter(
+        n_instances=None, slot_cap=8, max_batch=8, queue_depth=2,
+        backpressure="drop",
+    )
+    r = np.arange(8, dtype=np.int32)
+    for _ in range(5):  # 5 batches into a depth-2 queue, nobody popping
+        router.push(r, r, np.ones(8, np.float32))
+    assert router.dropped_batches == 3 and router.dropped_records == 24
+    assert router.records_in == 40
+    # conservation: every record is fed, dropped, or pending
+    assert (
+        router.records_out + router.dropped_records + router.pending
+        == router.records_in
+    )
+
+
+def test_backpressure_block_is_lossless():
+    router = MicrobatchRouter(
+        n_instances=None, slot_cap=8, max_batch=8, queue_depth=1,
+        backpressure="block",
+    )
+    r = np.arange(8, dtype=np.int32)
+
+    def produce():
+        for _ in range(6):
+            router.push(r, r, np.ones(8, np.float32))
+        router.close(drain=True)
+
+    t = threading.Thread(target=produce)
+    t.start()
+    got = 0
+    while True:
+        item = router.pop(timeout=5.0)
+        if item is DRAIN:
+            break
+        assert item is not None
+        time.sleep(0.002)  # slow consumer: force the producer to stall
+        got += item[3]
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    assert got == 48 and router.dropped_records == 0
+    assert router.blocked_events >= 1
+
+
+def test_max_batch_validated_against_slot_cap():
+    with pytest.raises(ValueError, match="max_batch"):
+        MicrobatchRouter(n_instances=2, slot_cap=8, max_batch=9)
+    with pytest.raises(ValueError, match="backpressure"):
+        MicrobatchRouter(n_instances=2, slot_cap=8, backpressure="shed")
+
+
+def test_push_after_close_raises():
+    router = MicrobatchRouter(n_instances=None, slot_cap=8)
+    router.close()
+    with pytest.raises(RuntimeError):
+        router.push(np.zeros(1, np.int32), np.zeros(1, np.int32), np.ones(1))

@@ -1,0 +1,286 @@
+"""Acceptance suite for the serve loop.
+
+The load-bearing property: a served stream — through a *real loopback
+socket*, with forced cascades and engaged backpressure — must leave the
+session in a state whose merged snapshot is bit-identical to
+``scan_ingest_and_snapshot`` on the same record sequence (the offline
+pre-routed path), at K=1 (single engine) and K=8 (packed engine).
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import d4m, serve
+from repro.core import hierarchical, multistream
+
+BATCH = 32
+CUTS = (8, 32)  # tiny cuts so cascades fire constantly
+
+
+def _records(seed, n, space=48):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.integers(0, space, n).astype(np.int32),
+        rng.integers(0, space, n).astype(np.int32),
+        np.ones(n, np.float32),
+    )
+
+
+def _offline_snapshot(r, c, v, k, cap):
+    """The reference: batch into [T, B], (route,) scan-ingest, snapshot."""
+    t = r.shape[0] // BATCH
+    R = jnp.asarray(r.reshape(t, BATCH))
+    C = jnp.asarray(c.reshape(t, BATCH))
+    V = jnp.asarray(v.reshape(t, BATCH))
+    if k == 1:
+        h = hierarchical.init(CUTS, top_capacity=4096, batch_size=BATCH)
+        _, snap, _ = d4m.scan_ingest_and_snapshot(h, R, C, V, CUTS, cap=cap)
+        return snap
+    routed = [
+        multistream.route_to_instances(R[i], C[i], V[i], k, BATCH)
+        for i in range(t)
+    ]
+    h = multistream.init_packed(k, CUTS, top_capacity=4096, batch_size=BATCH)
+    _, snap, _ = d4m.scan_ingest_and_snapshot(
+        h,
+        jnp.stack([x[0] for x in routed]),
+        jnp.stack([x[1] for x in routed]),
+        jnp.stack([x[2] for x in routed]),
+        CUTS,
+        cap=cap,
+        instances=k,
+    )
+    return snap
+
+
+def _session(k, **kw):
+    return d4m.D4MStream(d4m.StreamConfig(
+        cuts=CUTS, top_capacity=4096, batch_size=BATCH,
+        instances_per_device=k, snapshot_cap=8192, **kw,
+    ))
+
+
+def _slow_step(sess, delay_s=0.002):
+    """Emulate a slow device: the update step sleeps before dispatching, so
+    a fast producer deterministically outruns the feed loop and the bounded
+    queue's backpressure engages.  Semantics are untouched."""
+    orig = sess._step
+
+    def step(h, rows, cols, vals):
+        time.sleep(delay_s)
+        return orig(h, rows, cols, vals)
+
+    sess._step = step
+    return sess
+
+
+def _assert_bit_identical(got, want):
+    np.testing.assert_array_equal(np.asarray(got.rows), np.asarray(want.rows))
+    np.testing.assert_array_equal(np.asarray(got.cols), np.asarray(want.cols))
+    np.testing.assert_array_equal(np.asarray(got.vals), np.asarray(want.vals))
+    assert int(got.nnz) == int(want.nnz)
+
+
+# ---------------------------------------------------------------------------
+# THE acceptance test: loopback socket -> engine, bit-identical to offline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 8])
+def test_socket_serve_parity_with_offline_ingest(k):
+    n = 40 * BATCH
+    r, c, v = _records(seed=k, n=n)
+    want = _offline_snapshot(r, c, v, k, cap=8192)
+
+    sess = _slow_step(_session(k))
+    assert sess.kind == ("single" if k == 1 else "packed")
+    src = serve.TCPSource(port=0).start()
+    sender = threading.Thread(
+        target=serve.send_triples,
+        args=("127.0.0.1", src.port, r, c, v),
+        kwargs={"chunk_records": 256},
+    )
+    sender.start()
+    # queue_depth=1 + a fast local sender against the slowed device step:
+    # the producer overruns the feed loop, engaging (lossless) backpressure
+    report = sess.serve(src, max_latency_ms=1e9, queue_depth=1)
+    sender.join(timeout=30)
+
+    assert report.drained
+    assert report.records_in == report.records_fed == n
+    assert report.records_dropped == 0 and report.malformed == 0
+    assert report.batches_fed == 40
+    assert report.blocked_events >= 1, "backpressure never engaged"
+    tel = report.telemetry["session"]
+    cascades = np.asarray(
+        tel["cascades"] if k == 1 else tel["cascades_per_instance"]
+    )
+    assert cascades.sum() > 0, "cascades never fired"
+    _assert_bit_identical(sess.snapshot(), want)
+
+
+def test_serve_partial_final_batch_padded_not_lost():
+    """A record count that is not a batch multiple drains via a PAD-padded
+    residue batch; every record still lands (dense-reference check)."""
+    n = 5 * BATCH + 7
+    space = 48
+    r, c, v = _records(seed=42, n=n, space=space)
+    sess = _session(8)
+    report = sess.serve(
+        serve.ArraySource(r, c, v, chunk_records=50), max_latency_ms=1e9
+    )
+    assert report.drained and report.records_fed == n
+    assert report.batches_fed == 6
+    from repro.core import assoc
+
+    ref = np.zeros((space, space), np.float32)
+    np.add.at(ref, (r, c), v)
+    np.testing.assert_allclose(
+        np.asarray(assoc.to_dense(sess.snapshot(), space, space)), ref
+    )
+
+
+def test_serve_latency_flush_trickle_source():
+    """A trickle (sub-batch chunks with throttling) must still reach the
+    device via the max_latency_ms flush, not wait for a full batch."""
+    n = 24  # < one BATCH
+    r, c, v = _records(seed=3, n=n)
+    sess = _session(1)
+    report = sess.serve(
+        serve.ArraySource(r, c, v, chunk_records=8, throttle_s=0.01),
+        max_latency_ms=5.0,
+    )
+    assert report.drained and report.records_fed == n
+    assert sess.nnz() > 0
+
+
+def test_serve_drop_policy_counts_losses():
+    """drop backpressure: records lost to a full queue are counted, and the
+    accounting is conservative (fed + dropped == in)."""
+    n = 60 * BATCH
+    r, c, v = _records(seed=9, n=n)
+    sess = _slow_step(_session(8))
+    # depth-1 queue against the slowed device step: drops must occur
+    report = sess.serve(
+        serve.ArraySource(r, c, v, chunk_records=BATCH),
+        max_latency_ms=1e9, queue_depth=1, backpressure="drop",
+    )
+    assert report.drained
+    assert report.records_fed + report.records_dropped == n
+    assert report.records_dropped > 0, "drop policy never engaged"
+    assert sess.nnz() > 0
+
+
+def test_serve_mesh_engine_roundtrip():
+    """The feed loop also drives the shard_map mesh engine (1-device mesh
+    here; the program structure is the multi-device one)."""
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    sess = d4m.D4MStream(
+        d4m.StreamConfig(
+            cuts=CUTS, top_capacity=4096, batch_size=BATCH,
+            instances_per_device=4, snapshot_cap=8192,
+        ),
+        mesh=mesh,
+    )
+    assert sess.kind == "mesh"
+    n = 10 * BATCH
+    r, c, v = _records(seed=5, n=n)
+    report = sess.serve(
+        serve.ArraySource(r, c, v, chunk_records=64), max_latency_ms=1e9
+    )
+    assert report.drained and report.records_fed == n
+    want = _offline_snapshot(r, c, v, 4, cap=8192)
+    _assert_bit_identical(sess.snapshot(), want)
+
+
+def test_serve_config_on_stream_config_and_overrides():
+    """ServeConfig rides on StreamConfig; serve(**overrides) patches it."""
+    cfg = d4m.StreamConfig(
+        cuts=CUTS, top_capacity=1024, batch_size=BATCH,
+        serve=d4m.ServeConfig(max_latency_ms=123.0, queue_depth=3),
+    )
+    sess = d4m.D4MStream(cfg)
+    server = serve.D4MServer(sess, serve.ArraySource(
+        np.zeros(4, np.int32), np.zeros(4, np.int32), np.ones(4, np.float32),
+    ), cfg.serve)
+    assert server.config.max_latency_ms == 123.0
+    r, c, v = _records(seed=1, n=2 * BATCH)
+    report = sess.serve(
+        serve.ArraySource(r, c, v, chunk_records=16), queue_depth=5
+    )
+    assert report.drained and report.records_fed == 2 * BATCH
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError, match="backpressure"):
+        d4m.ServeConfig(backpressure="spill").validate()
+    with pytest.raises(ValueError, match="queue_depth"):
+        d4m.ServeConfig(queue_depth=0).validate()
+    with pytest.raises(ValueError, match="max_batch"):
+        d4m.StreamConfig(
+            cuts=(16,), top_capacity=64, batch_size=8,
+            serve=d4m.ServeConfig(max_batch=9),
+        ).validate()
+    # serve config invalid -> surfaces through StreamConfig.validate too
+    with pytest.raises(ValueError, match="max_latency_ms"):
+        d4m.StreamConfig(
+            cuts=(16,), top_capacity=64, batch_size=8,
+            serve=d4m.ServeConfig(max_latency_ms=-1),
+        ).validate()
+
+
+def test_feeder_error_surfaces_without_hanging():
+    """An engine error mid-serve must propagate out of run() promptly —
+    including with a throttled (gappy) source and a blocked producer — not
+    strand the reader thread and hang the join."""
+    n = 30 * BATCH
+    r, c, v = _records(seed=7, n=n)
+    sess = _session(1)
+    boom = RuntimeError("engine exploded")
+    calls = {"n": 0}
+    orig = sess._step
+
+    def step(h, rows, cols, vals):
+        calls["n"] += 1
+        if calls["n"] >= 3:
+            raise boom
+        return orig(h, rows, cols, vals)
+
+    sess._step = step
+    server = serve.D4MServer(
+        sess,
+        serve.ArraySource(r, c, v, chunk_records=BATCH, throttle_s=0.05),
+        d4m.ServeConfig(max_latency_ms=1e9, queue_depth=1),
+    )
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="engine exploded"):
+        server.run(timeout=30)
+    assert time.monotonic() - t0 < 30, "error path hung instead of raising"
+    # both threads must have unwound
+    assert not server._reader.is_alive() and not server._feeder.is_alive()
+
+
+def test_live_telemetry_fields_present():
+    n = 8 * BATCH
+    r, c, v = _records(seed=11, n=n)
+    sess = _session(1)
+    server = serve.D4MServer(
+        sess,
+        serve.ArraySource(r, c, v, chunk_records=16, throttle_s=0.005),
+        d4m.ServeConfig(max_latency_ms=1e9),
+    ).start()
+    tel = server.telemetry()  # live, mid-stream: host counters only
+    for key in (
+        "engine", "records_in", "records_fed", "batches_fed", "ingest_rate",
+        "records_dropped", "blocked_events", "queue_depth", "pending",
+        "wall_s", "drained", "malformed",
+    ):
+        assert key in tel, key
+    assert server.join(timeout=60)
+    report = server.report()
+    assert report.drained and report.records_fed == n
+    assert report.telemetry["session"]["nnz_total"] == sess.nnz()
+    assert report.ingest_rate > 0

@@ -1,0 +1,225 @@
+"""Sources + wire formats: encodings round-trip through sockets and files,
+streams terminate, malformed input is counted, generators are deterministic."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serve import wire
+from repro.serve.sources import (
+    ArraySource,
+    FileTailSource,
+    RMATSource,
+    TCPSource,
+)
+
+
+def _collect(source):
+    rows, cols, vals = [], [], []
+    for r, c, v in source.chunks():
+        rows.append(r)
+        cols.append(c)
+        vals.append(v)
+    if not rows:
+        return (
+            np.zeros(0, np.int32),
+            np.zeros(0, np.int32),
+            np.zeros(0, np.float32),
+        )
+    return np.concatenate(rows), np.concatenate(cols), np.concatenate(vals)
+
+
+def _triples(rng, n, space=1000):
+    return (
+        rng.integers(0, space, n).astype(np.int32),
+        rng.integers(0, space, n).astype(np.int32),
+        (rng.integers(1, 100, n)).astype(np.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# wire formats
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("encoding", ["text", "binary"])
+def test_wire_roundtrip(rng, encoding):
+    r, c, v = _triples(rng, 257)
+    buf = wire.encode(r, c, v, encoding)
+    (gr, gc, gv), leftover, bad = wire.decoder_for(encoding)(buf)
+    assert leftover == b"" and bad == 0
+    np.testing.assert_array_equal(gr, r)
+    np.testing.assert_array_equal(gc, c)
+    np.testing.assert_array_equal(gv, v)
+
+
+@pytest.mark.parametrize("encoding", ["text", "binary"])
+def test_wire_split_at_every_boundary_is_lossless(rng, encoding):
+    """Incremental decode must survive arbitrary TCP segmentation."""
+    r, c, v = _triples(rng, 13)
+    buf = wire.encode(r, c, v, encoding)
+    decode = wire.decoder_for(encoding)
+    for cut in range(len(buf) + 1):
+        out, leftover, bad = decode(buf[:cut])
+        out2, leftover2, bad2 = decode(leftover + buf[cut:])
+        assert bad == bad2 == 0
+        assert leftover2 == b""
+        np.testing.assert_array_equal(np.concatenate([out[0], out2[0]]), r)
+        np.testing.assert_array_equal(np.concatenate([out[2], out2[2]]), v)
+
+
+def test_text_malformed_lines_are_skipped_and_counted():
+    buf = b"1\t2\t3\nnot a record\n4\t5\t6\n7\t8\n"
+    (r, c, v), leftover, bad = wire.decode_text(buf)
+    assert bad == 2 and leftover == b""
+    np.testing.assert_array_equal(r, [1, 4])
+    np.testing.assert_array_equal(v, [3.0, 6.0])
+
+
+def test_text_short_line_never_reframes_into_next_record():
+    """A 2-field + 4-field pair has 6 numeric tokens; a flat split would
+    silently re-frame them as two records — they must count as malformed."""
+    (r, c, v), leftover, bad = wire.decode_text(b"1\t2\n3\t4\t5\t6\n")
+    assert bad == 2 and r.shape[0] == 0 and leftover == b""
+    # and valid neighbours still parse around them
+    (r, c, v), _, bad = wire.decode_text(b"9\t9\t9\n1\t2\n3\t4\t5\t6\n8\t8\t8\n")
+    assert bad == 2
+    np.testing.assert_array_equal(r, [9, 8])
+
+
+def test_binary_truncated_final_frame_is_counted_not_silent(tmp_path):
+    r = np.arange(4, dtype=np.int32)
+    buf = wire.encode_binary(r, r, np.ones(4, np.float32))
+    path = tmp_path / "t.bin"
+    path.write_bytes(buf + buf[: len(buf) - 5])  # second frame truncated
+    src = FileTailSource(str(path), encoding="binary")
+    gr, _, _ = _collect(src)
+    np.testing.assert_array_equal(gr, r)  # the complete frame survives
+    assert src.malformed == 1  # the lost tail is visible in telemetry
+
+
+def test_binary_bad_magic_raises():
+    with pytest.raises(ValueError, match="magic"):
+        wire.decode_binary(b"JUNKJUNKJUNK")
+
+
+# ---------------------------------------------------------------------------
+# TCP source
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("encoding", ["text", "binary"])
+def test_tcp_source_roundtrip(rng, encoding):
+    r, c, v = _triples(rng, 500)
+    src = TCPSource(port=0, encoding=encoding).start()
+    sender = threading.Thread(
+        target=wire.send_triples,
+        args=("127.0.0.1", src.port, r, c, v),
+        kwargs={"encoding": encoding, "chunk_records": 64},
+    )
+    sender.start()
+    gr, gc, gv = _collect(src)  # linger=False: ends when the client leaves
+    sender.join(timeout=10)
+    np.testing.assert_array_equal(gr, r)
+    np.testing.assert_array_equal(gc, c)
+    np.testing.assert_array_equal(gv, v)
+    assert src.records_out == 500 and src.malformed == 0
+
+
+def test_tcp_source_two_producers(rng):
+    r, c, v = _triples(rng, 200)
+    src = TCPSource(port=0).start()
+    halves = [
+        threading.Thread(
+            target=wire.send_triples,
+            args=("127.0.0.1", src.port, r[lo:hi], c[lo:hi], v[lo:hi]),
+        )
+        for lo, hi in ((0, 100), (100, 200))
+    ]
+    for t in halves:
+        t.start()
+    gr, gc, gv = _collect(src)
+    for t in halves:
+        t.join(timeout=10)
+    # interleaving across connections is arbitrary; the multiset must match
+    got = sorted(zip(gr.tolist(), gc.tolist(), gv.tolist()))
+    want = sorted(zip(r.tolist(), c.tolist(), v.tolist()))
+    assert got == want
+
+
+def test_tcp_source_stop_mid_stream(rng):
+    src = TCPSource(port=0, linger=True).start()
+    threading.Timer(0.2, src.stop).start()
+    gr, _, _ = _collect(src)  # must terminate despite linger=True
+    assert gr.shape[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# file source
+# ---------------------------------------------------------------------------
+
+def test_file_source_reads_whole_file(rng, tmp_path):
+    r, c, v = _triples(rng, 300)
+    path = tmp_path / "triples.tsv"
+    path.write_bytes(wire.encode_text(r, c, v))
+    gr, gc, gv = _collect(FileTailSource(str(path)))
+    np.testing.assert_array_equal(gr, r)
+    np.testing.assert_array_equal(gv, v)
+
+
+def test_file_source_parses_final_unterminated_line(tmp_path):
+    path = tmp_path / "t.tsv"
+    path.write_bytes(b"1\t2\t3\n4\t5\t6")  # no trailing newline
+    gr, gc, gv = _collect(FileTailSource(str(path)))
+    np.testing.assert_array_equal(gr, [1, 4])
+
+
+def test_file_source_follow_sees_appends(rng, tmp_path):
+    r, c, v = _triples(rng, 64)
+    path = tmp_path / "tail.tsv"
+    path.write_bytes(wire.encode_text(r[:32], c[:32], v[:32]))
+    src = FileTailSource(str(path), follow=True, poll_s=0.01)
+
+    def append_then_stop():
+        time.sleep(0.1)
+        with open(path, "ab") as f:
+            f.write(wire.encode_text(r[32:], c[32:], v[32:]))
+        time.sleep(0.2)
+        src.stop()
+
+    t = threading.Thread(target=append_then_stop)
+    t.start()
+    gr, gc, gv = _collect(src)
+    t.join(timeout=10)
+    np.testing.assert_array_equal(gr, r)
+    np.testing.assert_array_equal(gv, v)
+
+
+# ---------------------------------------------------------------------------
+# synthetic / replay sources
+# ---------------------------------------------------------------------------
+
+def test_rmat_source_deterministic_and_sized():
+    a = _collect(RMATSource(1000, chunk_records=256, scale=10, seed=7))
+    b = _collect(RMATSource(1000, chunk_records=256, scale=10, seed=7))
+    assert a[0].shape[0] == 1000
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    assert (a[0] < 2**10).all() and (a[0] >= 0).all()
+    c = _collect(RMATSource(1000, chunk_records=256, scale=10, seed=8))
+    assert not np.array_equal(a[0], c[0])
+
+
+def test_rmat_pregenerate_matches_lazy():
+    lazy = _collect(RMATSource(512, chunk_records=128, scale=9, seed=3))
+    pre = _collect(RMATSource(512, chunk_records=128, scale=9, seed=3, pregenerate=True))
+    np.testing.assert_array_equal(lazy[0], pre[0])
+    np.testing.assert_array_equal(lazy[1], pre[1])
+
+
+def test_array_source_chunks_and_counters(rng):
+    r, c, v = _triples(rng, 100)
+    src = ArraySource(r, c, v, chunk_records=33)
+    chunks = list(src.chunks())
+    assert [x[0].shape[0] for x in chunks] == [33, 33, 33, 1]
+    assert src.records_out == 100
+    np.testing.assert_array_equal(np.concatenate([x[0] for x in chunks]), r)
