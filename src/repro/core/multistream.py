@@ -206,6 +206,9 @@ def merge_snapshots(snap: Assoc, cap: int, sr: Semiring = PLUS_TIMES) -> Assoc:
 
 _H1 = np.uint32(0x9E3779B1)  # golden-ratio multiplicative constants
 _H2 = np.uint32(0x85EBCA77)
+_M1 = np.uint32(0x7FEB352D)  # murmur-style finalizer multipliers; the host
+_M2 = np.uint32(0x846CA68B)  # router (repro.serve.router) imports all four
+#                              so its mirror can never silently diverge
 
 
 def instance_of(rows: jax.Array, cols: jax.Array, n_instances: int) -> jax.Array:
@@ -213,9 +216,9 @@ def instance_of(rows: jax.Array, cols: jax.Array, n_instances: int) -> jax.Array
     integer finalizer so R-MAT power-law hot rows still spread evenly."""
     x = rows.astype(jnp.uint32) * _H1 + cols.astype(jnp.uint32) * _H2
     x = x ^ (x >> 16)
-    x = x * np.uint32(0x7FEB352D)
+    x = x * _M1
     x = x ^ (x >> 15)
-    x = x * np.uint32(0x846CA68B)
+    x = x * _M2
     x = x ^ (x >> 16)
     return (x % np.uint32(n_instances)).astype(jnp.int32)
 

@@ -54,7 +54,10 @@ class ServeConfig:
     * ``checkpoint_every`` — checkpoint the session every N fed microbatches
       (requires the session's ``checkpoint_dir``); the saved cursor is the
       count of source records already folded into the state, so a restore
-      can replay the exact tail.
+      can replay the exact tail.  Only valid with ``backpressure="block"``:
+      the cursor contract assumes fed records are an exact prefix of the
+      source stream, which ``"drop"`` breaks — a restore would re-fold
+      records fed after a drop and never replay the dropped ones.
     * ``poll_interval_s`` — feed-loop poll used both as the queue-pop
       timeout and the stale-batch flush cadence.
     * ``drain_timeout_s`` — bound on the graceful drain (flush + feed the
@@ -86,6 +89,14 @@ class ServeConfig:
         if self.checkpoint_every is not None and self.checkpoint_every < 1:
             raise ValueError(
                 f"checkpoint_every must be >= 1, got {self.checkpoint_every}"
+            )
+        if self.checkpoint_every is not None and self.backpressure != "block":
+            raise ValueError(
+                "checkpoint_every requires backpressure='block': the saved "
+                "cursor assumes fed records are an exact prefix of the "
+                "source stream, which the 'drop' policy breaks (a restore "
+                "would double-feed the post-drop tail and never replay the "
+                "dropped batches)"
             )
         if self.poll_interval_s <= 0:
             raise ValueError(

@@ -640,18 +640,20 @@ class D4MStream:
         like = jax.tree.map(jnp.zeros_like, self.state)
         state, extra = mgr.restore(like, step=step, shardings=None)
         # The manager returns host (numpy) leaves.  They must come back as
-        # device arrays that OWN their buffers (jnp.array(copy=True), never
-        # jnp.asarray / a bare device_put): on the CPU backend those can be
-        # zero-copy views of numpy-owned memory, and the session's donating
-        # update steps would then hand XLA a buffer it doesn't own — heap
-        # corruption on the first post-restore update (caught by the serve
-        # replay test).  On the mesh the owned copy is taken per leaf inside
-        # the shard placement, so the default-device staging footprint is
-        # one leaf, never the full unsharded state.
+        # device arrays that OWN their buffers (an explicit copy, never
+        # jnp.asarray / a device_put of the manager's array): on the CPU
+        # backend those can be zero-copy views of numpy-owned memory, and
+        # the session's donating update steps would then hand XLA a buffer
+        # it doesn't own — heap corruption on the first post-restore update
+        # (caught by the serve replay test).  On the mesh the owned copy
+        # stays on the HOST (np.array, not jnp.array) and device_put places
+        # it sharded in one step: the full unsharded leaf must never be
+        # staged on the default device, or states that only fit sharded
+        # across D devices would OOM device 0 on restore.
         if self.kind == "mesh":
             sh = NamedSharding(self.mesh, P(self.engine.axes))
             state = jax.tree.map(
-                lambda x: jax.device_put(jnp.array(x, copy=True), sh), state
+                lambda x: jax.device_put(np.array(x, copy=True), sh), state
             )
         else:
             state = jax.tree.map(lambda x: jnp.array(x, copy=True), state)

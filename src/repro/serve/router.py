@@ -20,10 +20,13 @@ Two layers:
 
 Threading contract: one producer thread calls :meth:`MicrobatchRouter.push`
 / :meth:`close`; one consumer thread calls :meth:`pop` and (only when a pop
-timed out, i.e. the queue is empty) :meth:`flush_if_stale`.  That ordering
-makes the producer's blocking enqueue deadlock-free: whenever the producer
-blocks, the queue is full, so the consumer's next pop succeeds without
-touching the router lock.
+timed out) :meth:`flush_if_stale`.  The producer may block on the queue
+while holding the router lock, so the consumer is wait-free by
+construction: :meth:`pop` never touches the lock, and
+:meth:`flush_if_stale` only try-acquires it (giving up if the producer
+holds it) and only flushes when the queue has room — it never blocks on
+either the lock or the queue.  Whenever the producer blocks, the queue is
+full, so the consumer's next pop succeeds and unwinds it.
 """
 from __future__ import annotations
 
@@ -36,11 +39,9 @@ import numpy as np
 
 from repro.core.assoc import PAD
 
-# the same golden-ratio / murmur finalizer constants as multistream.instance_of
-_H1 = np.uint32(0x9E3779B1)
-_H2 = np.uint32(0x85EBCA77)
-_M1 = np.uint32(0x7FEB352D)
-_M2 = np.uint32(0x846CA68B)
+# the device router's own hash constants: a retune of multistream.instance_of
+# reaches the host mirror mechanically, not via a parity-test failure
+from repro.core.multistream import _H1, _H2, _M1, _M2
 
 DRAIN = object()  # end-of-stream sentinel yielded by pop() exactly once
 
@@ -142,7 +143,7 @@ class MicrobatchRouter:
         self.records_in = 0
         self.batches_out = 0
         self.records_out = 0  # live records in flushed batches
-        self.dropped_records = 0  # lost to the "drop" backpressure policy
+        self.dropped_records = 0  # lost to the "drop" policy or an abort
         self.dropped_batches = 0
         self.routing_dropped = 0  # slot-overflow drops (0 by construction
         #                           while max_batch <= slot_cap)
@@ -178,6 +179,9 @@ class MicrobatchRouter:
                 while self._pend_count > 0:
                     self._flush_locked(partial=True)
             else:
+                # abort: the unbatched residue is discarded — counted,
+                # never silent, so abort-path accounting stays exact
+                self.dropped_records += self._pend_count
                 self._pend.clear()
                 self._pend_count = 0
             self._q.put(DRAIN)  # never dropped, whatever the policy
@@ -196,14 +200,32 @@ class MicrobatchRouter:
     def flush_if_stale(self) -> bool:
         """Latency flush: emit the pending partial batch if its oldest
         record has waited longer than ``max_latency_ms``.  Call only from
-        the consumer thread after an empty pop (see threading contract)."""
-        with self._lock:
+        the consumer thread after a timed-out pop (see threading contract).
+
+        Never blocks.  A blocking lock acquire here can deadlock: the
+        producer does its blocking enqueue while holding the lock, and one
+        large push can fill the queue and stall on put between the
+        consumer's pop timeout and its lock acquire — producer waiting for
+        a pop the lock-blocked consumer can never perform.  So this only
+        try-acquires, and bails if the queue is full (a blocking put from
+        the consumer with the lock held would strand the producer on the
+        lock with nobody popping).  Both bail-outs are safe to skip: they
+        mean batches are in flight, so the next pop succeeds and the stale
+        residue is retried on the next timeout.
+        """
+        if not self._lock.acquire(blocking=False):
+            return False  # producer mid-push; it is making progress
+        try:
             if self._closed or self._pend_count == 0 or self._oldest_ts is None:
                 return False
             if (time.monotonic() - self._oldest_ts) * 1e3 < self.max_latency_ms:
                 return False
+            if self._q.full():
+                return False  # batches queued; flush on a later timeout
             self._flush_locked(partial=True)
             return True
+        finally:
+            self._lock.release()
 
     @property
     def pending(self) -> int:

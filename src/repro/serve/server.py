@@ -167,6 +167,7 @@ class D4MServer:
             self.router.close(drain=not self._abort.is_set())
 
     def _feed_loop(self) -> None:
+        in_flight = None  # popped batch not yet counted fed (error account)
         try:
             while True:
                 item = self.router.pop(timeout=self.config.poll_interval_s)
@@ -179,9 +180,11 @@ class D4MServer:
                     self.records_discarded += int(item[3])
                     continue  # keep popping so a blocked producer unwinds
                 rows, cols, vals, live = item
+                in_flight = item
                 self._dispatch(rows, cols, vals)
                 self.batches_fed += 1
                 self.records_fed += int(live)
+                in_flight = None
                 every = self.config.checkpoint_every
                 if every is not None and self.batches_fed % every == 0:
                     self._checkpoint()
@@ -199,6 +202,9 @@ class D4MServer:
         except BaseException as e:
             self._error = self._error or e
             self._t1 = self._t1 or time.monotonic()
+            if in_flight is not None:
+                # the batch whose dispatch raised: popped, never applied
+                self.records_discarded += int(in_flight[3])
             # unwind the producer side: stop the source and keep draining the
             # queue until the reader has published DRAIN — a blocked push (or
             # a throttled source's quiet gap) must not strand the reader, or
@@ -212,9 +218,12 @@ class D4MServer:
                 item = self.router.pop(timeout=0.2)
                 if item is DRAIN:
                     break
-                if item is None and not (
-                    self._reader is not None and self._reader.is_alive()
-                ):
+                if item is not None:
+                    # counted, never silent: these batches were routed but
+                    # will never be fed
+                    self.records_discarded += int(item[3])
+                    continue
+                if not (self._reader is not None and self._reader.is_alive()):
                     break  # reader already gone; nothing more can arrive
         finally:
             self._done.set()

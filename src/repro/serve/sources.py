@@ -155,11 +155,15 @@ class TCPSource(Source):
                         data = b""
                     if data:
                         buffers[conn] += data
-                        chunk = self._drain(buffers, conn, final=False)
+                        chunk, alive = self._drain(buffers, conn, final=False)
+                        if not alive:  # desynchronized: drop the connection
+                            sel.unregister(conn)
+                            conn.close()
+                            del buffers[conn]
                         if chunk is not None:
                             yield chunk
                     else:  # orderly shutdown from the peer
-                        chunk = self._drain(buffers, conn, final=True)
+                        chunk, _ = self._drain(buffers, conn, final=True)
                         sel.unregister(conn)
                         conn.close()
                         del buffers[conn]
@@ -167,7 +171,7 @@ class TCPSource(Source):
                             yield chunk
             # stop() during live connections: flush whatever already arrived
             for conn in list(buffers):
-                chunk = self._drain(buffers, conn, final=True)
+                chunk, _ = self._drain(buffers, conn, final=True)
                 if chunk is not None:
                     yield chunk
         finally:
@@ -180,17 +184,24 @@ class TCPSource(Source):
             self._listener.close()
             self._listener = None
 
-    def _drain(self, buffers, conn, final: bool) -> Optional[Chunk]:
+    def _drain(
+        self, buffers, conn, final: bool
+    ) -> Tuple[Optional[Chunk], bool]:
+        """Decode the connection's buffer.  Returns ``(chunk, alive)``;
+        ``alive=False`` means the stream desynchronized and the caller must
+        drop the connection — it cannot be resynchronized safely (see
+        :func:`~repro.serve.wire.decode_binary`), so keeping it would
+        re-fail on every recv or, worse, false-sync on stray payload bytes
+        that happen to look like a frame header."""
         buf = buffers[conn]
         if final and self.encoding == "text" and buf and not buf.endswith(b"\n"):
             buf += b"\n"  # a last record without its newline is still a record
         try:
             (r, c, v), leftover, bad = self._decode(buf)
         except ValueError:
-            # desynchronized binary stream: drop the connection's buffer
             self.malformed += 1
             buffers[conn] = b""
-            return None
+            return None, False
         if final and leftover:
             # a producer died mid-frame: the incomplete tail is lost — count
             # it so the shortfall is diagnosable from telemetry
@@ -199,8 +210,8 @@ class TCPSource(Source):
         self.malformed += bad
         buffers[conn] = leftover
         if r.shape[0] == 0:
-            return None
-        return self._count((r, c, v))
+            return None, True
+        return self._count((r, c, v)), True
 
 
 # ---------------------------------------------------------------------------
@@ -212,8 +223,15 @@ class FileTailSource(Source):
 
     ``follow=False`` yields the file once and ends at EOF.  ``follow=True``
     polls for growth every ``poll_s`` (collector processes appending to a
-    landing file) until :meth:`stop` is called; a truncation (e.g. log
-    rotation) rewinds to the new end-of-file.
+    landing file) until :meth:`stop` is called, with ``tail -F`` rotation
+    semantics: an in-place truncation rewinds to the start of the new
+    content, and a rename+create rotation reopens the path, so records
+    written between the rotation and the next poll are read once, never
+    skipped and never re-ingested from the old file.  Like ``tail -F``
+    itself, in-place truncation detection is poll-based and best-effort: a
+    writer that truncates and regrows the file past the reader's offset
+    within one poll (``copytruncate`` under a very hot writer) is
+    undetectable — use rename+create rotation for lossless feeds.
     """
 
     def __init__(
@@ -234,18 +252,60 @@ class FileTailSource(Source):
 
     def chunks(self) -> Iterator[Chunk]:
         buf = b""
-        with open(self.path, "rb") as f:
+        f = open(self.path, "rb")
+        try:
             while not self.stopped:
                 data = f.read(self.chunk_bytes)
                 if not data:
                     if not self.follow:
                         break
-                    pos = f.tell()
+                    # tail -F semantics at EOF: records written between a
+                    # rotation and this poll must be read, never skipped
                     try:
-                        if os.path.getsize(self.path) < pos:
-                            f.seek(0, os.SEEK_END)  # truncated under us
+                        st = os.stat(self.path)
+                        if st.st_ino != os.fstat(f.fileno()).st_ino:
+                            # rotated by rename+create.  Open the NEW file
+                            # first: if a second rotation makes this raise,
+                            # the old fd stays usable and the next poll
+                            # retries.  Then drain records the writer
+                            # appended to the old file after our last read
+                            # — closing without draining would silently
+                            # lose them — and only then switch over.
+                            nf = open(self.path, "rb")
+                            try:
+                                while True:
+                                    data = f.read(self.chunk_bytes)
+                                    if not data:
+                                        break
+                                    buf += data
+                                    chunk = self._parse(buf, final=False)
+                                    buf = self._leftover
+                                    if chunk is not None:
+                                        yield chunk
+                            except BaseException:
+                                # drain failed (stale old fd, consumer
+                                # gone): nf must not leak once per poll
+                                nf.close()
+                                raise
+                            f.close()
+                            f = nf
+                            # the old file's residue is at ITS end of
+                            # file: parse with final semantics (same as
+                            # stop()/EOF), so a last record missing only
+                            # its newline is delivered, not dropped
+                            chunk = self._parse(buf, final=True)
+                            buf = b""
+                            if chunk is not None:
+                                yield chunk
+                        elif st.st_size < f.tell():
+                            # truncated in place: rewind to the new start
+                            f.seek(0)
+                            chunk = self._parse(buf, final=True)
+                            buf = b""
+                            if chunk is not None:
+                                yield chunk
                     except OSError:
-                        pass
+                        pass  # mid-rotation; the path will reappear
                     time.sleep(self.poll_s)
                     continue
                 buf += data
@@ -253,6 +313,8 @@ class FileTailSource(Source):
                 buf = self._leftover
                 if chunk is not None:
                     yield chunk
+        finally:
+            f.close()
         chunk = self._parse(buf, final=True)
         if chunk is not None:
             yield chunk

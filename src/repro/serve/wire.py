@@ -28,7 +28,16 @@ ENCODINGS = ("text", "binary")
 BINARY_MAGIC = b"D4MB"
 _HEADER = struct.Struct("<4sI")  # magic, record count
 
+# Sanity ceiling on one frame's record count (16M records = 192 MiB body,
+# far above any sane batch).  Without it, a corrupted count field behind a
+# valid magic makes the receiver buffer the connection unboundedly toward
+# OOM "waiting for the frame to complete" instead of dropping it.
+MAX_FRAME_RECORDS = 1 << 24
+
 Records = Tuple[np.ndarray, np.ndarray, np.ndarray]  # rows i32, cols i32, vals f32
+
+_I32_MIN = np.iinfo(np.int32).min
+_I32_MAX = np.iinfo(np.int32).max
 
 
 def _empty() -> Records:
@@ -39,18 +48,40 @@ def _empty() -> Records:
     )
 
 
+def _ids_i32(x, name: str) -> np.ndarray:
+    """Shared id coercion for BOTH encoders: float ids truncate (records
+    out of a jnp computation), but out-of-int32-range ids raise instead of
+    silently wrapping into fabricated ids the decoders' range checks could
+    never catch."""
+    a = np.asarray(x).ravel()
+    if a.size and not (
+        np.min(a) >= _I32_MIN and np.max(a) <= _I32_MAX
+    ):
+        raise ValueError(f"{name} ids out of int32 range")
+    return np.ascontiguousarray(a, np.int32)
+
+
 # ---------------------------------------------------------------------------
 # text encoding
 # ---------------------------------------------------------------------------
 
 def encode_text(rows, cols, vals) -> bytes:
-    """Serialize triples as newline-delimited ``row\\tcol\\tval`` lines."""
-    rows = np.asarray(rows).ravel()
-    cols = np.asarray(cols).ravel()
-    vals = np.asarray(vals).ravel()
+    """Serialize triples as newline-delimited ``row\\tcol\\tval`` lines.
+
+    Values are written with 9 significant digits, which round-trips any
+    float32 exactly — ``decode_text(encode_text(...))`` is value-preserving
+    on the wire's float32 payloads, so a text feed replays bit-identically.
+    """
+    rows = _ids_i32(rows, "row")  # shared with the binary encoder: float
+    cols = _ids_i32(cols, "col")  # ids must not emit '1.0' lines our own
+    vals = np.asarray(vals, np.float32).ravel()  # decoder then rejects
+    if not (rows.shape == cols.shape == vals.shape):
+        raise ValueError(
+            f"triple columns disagree: {rows.shape} {cols.shape} {vals.shape}"
+        )
     out = []
     for r, c, v in zip(rows.tolist(), cols.tolist(), vals.tolist()):
-        out.append(f"{r}\t{c}\t{v:g}\n")
+        out.append(f"{r}\t{c}\t{v:.9g}\n")
     return "".join(out).encode("ascii")
 
 
@@ -59,8 +90,8 @@ def decode_text(buf: bytes) -> Tuple[Records, bytes, int]:
 
     Returns ``((rows, cols, vals), leftover, malformed)`` — ``leftover`` is
     the trailing partial line, ``malformed`` counts lines that did not parse
-    as three numeric fields (skipped, never fatal: one bad record must not
-    poison a long-lived feed).
+    as three numeric fields with int32-range ids (skipped, never fatal: one
+    bad record must not poison a long-lived feed).
     """
     cut = buf.rfind(b"\n")
     if cut < 0:
@@ -77,22 +108,37 @@ def decode_text(buf: bytes) -> Tuple[Records, bytes, int]:
         return _empty(), leftover, malformed
     try:
         flat = np.array([t for p in good for t in p])
+        # ids parse through int64 with an EXPLICIT range check: numpy 1.x
+        # silently wraps out-of-int32-range strings on a direct int32
+        # astype (only numpy >= 2 raises), which would fabricate ids
+        r64 = flat[0::3].astype(np.int64)
+        c64 = flat[1::3].astype(np.int64)
+        lo, hi = np.int64(_I32_MIN), np.int64(_I32_MAX)
+        if (
+            r64.min() < lo or r64.max() > hi
+            or c64.min() < lo or c64.max() > hi
+        ):
+            raise ValueError("id out of int32 range")
         return (
             (
-                flat[0::3].astype(np.int32),
-                flat[1::3].astype(np.int32),
+                r64.astype(np.int32),
+                c64.astype(np.int32),
                 flat[2::3].astype(np.float32),
             ),
             leftover,
             malformed,
         )
-    except ValueError:
-        pass  # non-numeric garbage in a 3-field line; re-parse per line
+    except (ValueError, OverflowError):
+        # non-numeric garbage or an out-of-int32-range id in a 3-field
+        # line; re-parse per line so one bad record skips, not the block
+        pass
     rows, cols, vals = [], [], []
     for p in good:
         try:
             r, c, v = int(p[0]), int(p[1]), float(p[2])
-        except ValueError:
+            if not (_I32_MIN <= r <= _I32_MAX and _I32_MIN <= c <= _I32_MAX):
+                raise ValueError(p)
+        except (ValueError, OverflowError):
             malformed += 1
             continue
         rows.append(r)
@@ -114,13 +160,26 @@ def decode_text(buf: bytes) -> Tuple[Records, bytes, int]:
 # ---------------------------------------------------------------------------
 
 def encode_binary(rows, cols, vals) -> bytes:
-    """One framed columnar batch (see module docstring for the layout)."""
-    rows = np.ascontiguousarray(np.asarray(rows).ravel(), np.int32)
-    cols = np.ascontiguousarray(np.asarray(cols).ravel(), np.int32)
+    """Framed columnar batch(es) (see module docstring for the layout).
+
+    Batches beyond :data:`MAX_FRAME_RECORDS` are split into multiple
+    frames, so the encoder can never emit a frame its own decoder rejects
+    as desynchronized."""
+    rows = _ids_i32(rows, "row")
+    cols = _ids_i32(cols, "col")
     vals = np.ascontiguousarray(np.asarray(vals).ravel(), np.float32)
     if not (rows.shape == cols.shape == vals.shape):
         raise ValueError(
             f"triple columns disagree: {rows.shape} {cols.shape} {vals.shape}"
+        )
+    if rows.shape[0] > MAX_FRAME_RECORDS:
+        return b"".join(
+            encode_binary(
+                rows[i : i + MAX_FRAME_RECORDS],
+                cols[i : i + MAX_FRAME_RECORDS],
+                vals[i : i + MAX_FRAME_RECORDS],
+            )
+            for i in range(0, rows.shape[0], MAX_FRAME_RECORDS)
         )
     header = _HEADER.pack(BINARY_MAGIC, rows.shape[0])
     return header + rows.tobytes() + cols.tobytes() + vals.tobytes()
@@ -129,18 +188,24 @@ def encode_binary(rows, cols, vals) -> bytes:
 def decode_binary(buf: bytes) -> Tuple[Records, bytes, int]:
     """Parse every complete frame in ``buf``; returns like :func:`decode_text`.
 
-    A bad magic raises ``ValueError`` — unlike one mangled text line, a
-    desynchronized binary stream cannot be resynchronized safely.
+    A bad magic (or an implausible record count — see
+    :data:`MAX_FRAME_RECORDS`) raises ``ValueError`` — unlike one mangled
+    text line, a desynchronized binary stream cannot be resynchronized
+    safely.  Frames fully parsed *before* the bad one are not lost to TCP
+    coalescing: they are returned with the bad frame as ``leftover``, and
+    the next call (which sees the bad header first) raises.
     """
     rows, cols, vals = [], [], []
     off = 0
     n = len(buf)
     while n - off >= _HEADER.size:
         magic, count = _HEADER.unpack_from(buf, off)
-        if magic != BINARY_MAGIC:
+        if magic != BINARY_MAGIC or count > MAX_FRAME_RECORDS:
+            if rows:
+                break  # salvage the good frames; next call raises
             raise ValueError(
-                f"bad frame magic {magic!r} at offset {off}; binary feed "
-                f"desynchronized"
+                f"bad frame header (magic={magic!r}, count={count}) at "
+                f"offset {off}; binary feed desynchronized"
             )
         body = 12 * count  # 4B row + 4B col + 4B val per record
         if n - off - _HEADER.size < body:

@@ -131,11 +131,77 @@ def test_backpressure_block_is_lossless():
     assert router.blocked_events >= 1
 
 
+def test_flush_if_stale_is_wait_free():
+    """The consumer must never block in flush_if_stale: not on the router
+    lock (the producer may hold it while stalled on a full queue) and not
+    on the queue (a blocking put with the lock held would strand the
+    producer on the lock with nobody popping)."""
+    router = MicrobatchRouter(
+        n_instances=None, slot_cap=4, max_batch=4, queue_depth=1,
+        max_latency_ms=0.0,
+    )
+    r = np.arange(4, dtype=np.int32)
+    router.push(r, r, np.ones(4, np.float32))  # one full batch -> queue full
+    router.push(r[:2], r[:2], np.ones(2, np.float32))  # stale residue pends
+    assert not router.flush_if_stale()  # full queue: bail, don't block
+    with router._lock:  # producer mid-push: try-acquire fails, no block
+        assert not router.flush_if_stale()
+    assert router.pop(timeout=1.0) is not None
+    assert router.flush_if_stale()  # room again: the residue flushes
+    assert router.pop(timeout=1.0)[3] == 2
+
+
+def test_block_policy_with_latency_flusher_does_not_deadlock():
+    """Regression: one large push flushes queue_depth+1 microbatches in a
+    single lock hold and blocks on put just as the consumer's pop times out
+    and it enters flush_if_stale.  A lock-blocking flush_if_stale deadlocks
+    here (producer waits for a pop the lock-blocked consumer can't do)."""
+    router = MicrobatchRouter(
+        n_instances=None, slot_cap=8, max_batch=8, queue_depth=1,
+        backpressure="block", max_latency_ms=0.0,
+    )
+    r = np.arange(64, dtype=np.int32)
+
+    def produce():
+        router.push(r, r, np.ones(64, np.float32))  # 8 batches in ONE push
+        router.push(r[:3], r[:3], np.ones(3, np.float32))  # residue
+        router.close(drain=True)
+
+    t = threading.Thread(target=produce)
+    t.start()
+    got = 0
+    deadline = time.monotonic() + 20.0
+    while time.monotonic() < deadline:
+        item = router.pop(timeout=0.001)  # tiny timeout: hammer the flusher
+        if item is DRAIN:
+            break
+        if item is None:
+            router.flush_if_stale()
+            continue
+        got += item[3]
+    else:
+        pytest.fail("consumer deadlocked against a blocked producer")
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    assert got == 67 and router.dropped_records == 0
+
+
 def test_max_batch_validated_against_slot_cap():
     with pytest.raises(ValueError, match="max_batch"):
         MicrobatchRouter(n_instances=2, slot_cap=8, max_batch=9)
     with pytest.raises(ValueError, match="backpressure"):
         MicrobatchRouter(n_instances=2, slot_cap=8, backpressure="shed")
+
+
+def test_close_without_drain_counts_pending_residue():
+    """Abort must not lose records silently: the unbatched residue is
+    discarded but counted, keeping conservation exact."""
+    router = MicrobatchRouter(n_instances=None, slot_cap=8, max_batch=8)
+    r = np.arange(10, dtype=np.int32)
+    router.push(r, r, np.ones(10, np.float32))
+    router.close(drain=False)
+    assert router.dropped_records == 2
+    assert router.records_out + router.dropped_records == router.records_in
 
 
 def test_push_after_close_raises():

@@ -230,6 +230,10 @@ def test_serve_config_validation():
             cuts=(16,), top_capacity=64, batch_size=8,
             serve=d4m.ServeConfig(max_latency_ms=-1),
         ).validate()
+    # the checkpoint cursor assumes fed records are an exact prefix of the
+    # source stream; the lossy "drop" policy breaks replay-from-cursor
+    with pytest.raises(ValueError, match="checkpoint_every requires"):
+        d4m.ServeConfig(checkpoint_every=2, backpressure="drop").validate()
 
 
 def test_feeder_error_surfaces_without_hanging():
@@ -261,6 +265,45 @@ def test_feeder_error_surfaces_without_hanging():
     assert time.monotonic() - t0 < 30, "error path hung instead of raising"
     # both threads must have unwound
     assert not server._reader.is_alive() and not server._feeder.is_alive()
+
+
+def test_feeder_error_counts_discarded_batches():
+    """The error-unwind drain must count every queued-but-unfed batch in
+    records_dropped — post-error accounting stays exact, never silent."""
+    n = 30 * BATCH + 5  # +5: an unbatched residue the abort must count too
+    r, c, v = _records(seed=9, n=n)
+    sess = _session(1)
+    calls = {"n": 0}
+    orig = sess._step
+
+    def step(h, rows, cols, vals):
+        calls["n"] += 1
+        if calls["n"] >= 2:
+            time.sleep(0.05)  # let the producer fill the queue behind us
+            raise RuntimeError("engine exploded")
+        return orig(h, rows, cols, vals)
+
+    sess._step = step
+    server = serve.D4MServer(
+        sess,
+        serve.ArraySource(r, c, v, chunk_records=n),  # one large push
+        d4m.ServeConfig(max_latency_ms=1e9, queue_depth=4),
+    )
+    with pytest.raises(RuntimeError, match="engine exploded"):
+        server.run(timeout=30)
+    assert server.records_discarded > 0
+    # every routed batch is either fed or discarded-and-counted
+    assert (
+        server.records_fed + server.records_discarded
+        == server.router.records_out
+    )
+    # full conservation incl. the router's abort-dropped residue: nothing
+    # the source handed over goes missing from post-error telemetry
+    tel = server.telemetry()
+    assert tel["records_dropped"] == (
+        server.records_discarded + server.router.dropped_records
+    )
+    assert tel["records_in"] == tel["records_fed"] + tel["records_dropped"]
 
 
 def test_live_telemetry_fields_present():

@@ -1,5 +1,6 @@
 """Sources + wire formats: encodings round-trip through sockets and files,
 streams terminate, malformed input is counted, generators are deterministic."""
+import socket
 import threading
 import time
 
@@ -68,6 +69,62 @@ def test_wire_split_at_every_boundary_is_lossless(rng, encoding):
         np.testing.assert_array_equal(np.concatenate([out[2], out2[2]]), v)
 
 
+def test_text_roundtrip_is_float32_exact():
+    """The text wire must be value-preserving for arbitrary float32 payloads
+    (not just short decimals), or a text feed breaks bit-identical replay."""
+    v = np.array(
+        [0.1, 1.0 / 3.0, np.pi, -2.5e-38, 1.4e-45, 16777217.0, -1e30],
+        np.float32,
+    )
+    r = np.arange(v.shape[0], dtype=np.int32)
+    (gr, gc, gv), leftover, bad = wire.decode_text(wire.encode_text(r, r, v))
+    assert leftover == b"" and bad == 0
+    np.testing.assert_array_equal(gv.view(np.uint32), v.view(np.uint32))
+
+
+def test_text_encoder_coerces_float_ids():
+    """Ids arriving as float arrays (e.g. out of a jnp computation) must
+    encode as integers — like the binary encoder — not as '1.0' lines our
+    own decoder rejects as malformed."""
+    (r, c, v), leftover, bad = wire.decode_text(
+        wire.encode_text([1.0, 2.0], [3.0, 4.0], [0.5, 1.5])
+    )
+    assert bad == 0 and leftover == b""
+    np.testing.assert_array_equal(r, [1, 2])
+    np.testing.assert_array_equal(c, [3, 4])
+    np.testing.assert_array_equal(v, np.array([0.5, 1.5], np.float32))
+
+
+@pytest.mark.parametrize("encoding", ["text", "binary"])
+def test_encoders_reject_mismatched_columns(encoding):
+    """Silent zip-truncation on mismatched triple columns would be data
+    loss invisible to every counter; both encoders must raise."""
+    with pytest.raises(ValueError, match="disagree"):
+        wire.encode([1, 2, 3], [7, 8], [0.5, 1.5, 2.5], encoding)
+
+
+@pytest.mark.parametrize("encoding", ["text", "binary"])
+def test_encoders_reject_out_of_int32_ids(encoding):
+    """Both encoders must raise on out-of-range ids — silently wrapping
+    would fabricate ids the decoders' range checks can never catch."""
+    big = np.array([5_000_000_000], np.int64)
+    one = np.ones(1, np.int64)
+    with pytest.raises(ValueError, match="int32 range"):
+        wire.encode(big, one, np.ones(1, np.float32), encoding)
+    with pytest.raises(ValueError, match="int32 range"):
+        wire.encode(one, -big, np.ones(1, np.float32), encoding)
+
+
+def test_text_out_of_int32_range_ids_counted_not_fatal():
+    """An out-of-range id must count as malformed, not raise OverflowError
+    out of the decoder and kill the reader thread."""
+    buf = b"1\t2\t3\n5000000000\t1\t1.0\n1\t-5000000000\t1.0\n4\t5\t6\n"
+    (r, c, v), leftover, bad = wire.decode_text(buf)
+    assert bad == 2 and leftover == b""
+    np.testing.assert_array_equal(r, [1, 4])
+    np.testing.assert_array_equal(v, [3.0, 6.0])
+
+
 def test_text_malformed_lines_are_skipped_and_counted():
     buf = b"1\t2\t3\nnot a record\n4\t5\t6\n7\t8\n"
     (r, c, v), leftover, bad = wire.decode_text(buf)
@@ -85,6 +142,41 @@ def test_text_short_line_never_reframes_into_next_record():
     (r, c, v), _, bad = wire.decode_text(b"9\t9\t9\n1\t2\n3\t4\t5\t6\n8\t8\t8\n")
     assert bad == 2
     np.testing.assert_array_equal(r, [9, 8])
+
+
+def test_binary_desync_salvages_frames_parsed_before_it(rng):
+    """TCP coalescing must not lose data: frames fully parsed before a bad
+    header are returned (with the bad frame as leftover); only the next
+    call — which sees the bad header first — raises."""
+    r, c, v = _triples(rng, 6)
+    good = wire.encode_binary(r, c, v)
+    (gr, _, gv), leftover, bad = wire.decode_binary(good + b"JUNKJUNKJUNK")
+    assert bad == 0 and leftover == b"JUNKJUNKJUNK"
+    np.testing.assert_array_equal(gr, r)
+    np.testing.assert_array_equal(gv, v)
+    with pytest.raises(ValueError, match="desynchronized"):
+        wire.decode_binary(leftover)
+
+
+def test_binary_implausible_frame_count_is_desync_not_oom():
+    """A corrupted count field behind a valid magic must raise (dropping
+    the connection) instead of buffering gigabytes 'waiting for the frame
+    to complete'."""
+    header = wire._HEADER.pack(wire.BINARY_MAGIC, wire.MAX_FRAME_RECORDS + 1)
+    with pytest.raises(ValueError, match="desynchronized"):
+        wire.decode_binary(header)
+
+
+def test_binary_encoder_splits_at_frame_ceiling(rng, monkeypatch):
+    """The encoder must never emit a frame its own decoder rejects: counts
+    beyond MAX_FRAME_RECORDS split into multiple frames."""
+    monkeypatch.setattr(wire, "MAX_FRAME_RECORDS", 4)
+    r, c, v = _triples(rng, 10)
+    buf = wire.encode_binary(r, c, v)
+    (gr, gc, gv), leftover, bad = wire.decode_binary(buf)
+    assert leftover == b"" and bad == 0
+    np.testing.assert_array_equal(gr, r)
+    np.testing.assert_array_equal(gv, v)
 
 
 def test_binary_truncated_final_frame_is_counted_not_silent(tmp_path):
@@ -146,6 +238,33 @@ def test_tcp_source_two_producers(rng):
     assert got == want
 
 
+def test_tcp_binary_desync_drops_connection(rng):
+    """A desynchronized binary connection must be dropped immediately — not
+    re-decoded (and re-failed, or false-synced into fabricated records) on
+    every subsequent recv for the connection's lifetime."""
+    r, c, v = _triples(rng, 8)
+    src = TCPSource(port=0, encoding="binary").start()
+    release = threading.Event()
+
+    def produce():
+        with socket.create_connection(("127.0.0.1", src.port), 10) as s:
+            s.sendall(b"XXXX" + wire.encode_binary(r, c, v))  # misaligned
+            release.wait(10)  # hold the socket open: no EOF to save the day
+
+    t = threading.Thread(target=produce)
+    t.start()
+    try:
+        gr, _, _ = _collect(src)  # linger=False ends once buffers empty
+        # the stream ended while the client still held its socket open, so
+        # the server dropped the connection rather than waiting for EOF
+        assert t.is_alive()
+        assert gr.shape[0] == 0 and src.records_out == 0
+        assert src.malformed == 1
+    finally:
+        release.set()
+        t.join(timeout=10)
+
+
 def test_tcp_source_stop_mid_stream(rng):
     src = TCPSource(port=0, linger=True).start()
     threading.Timer(0.2, src.stop).start()
@@ -192,6 +311,84 @@ def test_file_source_follow_sees_appends(rng, tmp_path):
     t.join(timeout=10)
     np.testing.assert_array_equal(gr, r)
     np.testing.assert_array_equal(gv, v)
+
+
+def test_file_source_follow_truncation_rewinds_to_start(rng, tmp_path):
+    """Log rotation: truncate + immediately rewrite.  tail -F semantics —
+    the new content must be read from offset 0, not skipped past with a
+    seek-to-end that loses everything written before the next poll."""
+    r, c, v = _triples(rng, 64)
+    path = tmp_path / "rotate.tsv"
+    path.write_bytes(wire.encode_text(r[:48], c[:48], v[:48]))
+    src = FileTailSource(str(path), follow=True, poll_s=0.01)
+
+    def rotate_then_stop():
+        time.sleep(0.15)
+        # truncating rewrite, strictly smaller so the shrink is detectable
+        path.write_bytes(wire.encode_text(r[48:], c[48:], v[48:]))
+        time.sleep(0.3)
+        src.stop()
+
+    t = threading.Thread(target=rotate_then_stop)
+    t.start()
+    gr, gc, gv = _collect(src)
+    t.join(timeout=10)
+    np.testing.assert_array_equal(gr, r)
+    np.testing.assert_array_equal(gv, v)
+    assert src.malformed == 0
+
+
+def test_file_source_follow_rename_rotation_reopens(rng, tmp_path):
+    """Rotation by rename+create (logrotate's default): the tailer must
+    drain what the writer appended to the old file after the last read —
+    not silently lose it — then reopen the path; sticking with the old fd
+    would re-ingest the old file as duplicates and never see the new one."""
+    r, c, v = _triples(rng, 64)
+    path = tmp_path / "rotate.tsv"
+    path.write_bytes(wire.encode_text(r[:40], c[:40], v[:40]))
+    src = FileTailSource(str(path), follow=True, poll_s=0.01)
+
+    def rotate_then_stop():
+        time.sleep(0.15)
+        with open(path, "ab") as f:  # appended just before the rotation:
+            f.write(wire.encode_text(r[40:48], c[40:48], v[40:48]))
+        path.rename(tmp_path / "rotate.tsv.1")
+        path.write_bytes(wire.encode_text(r[48:], c[48:], v[48:]))
+        time.sleep(0.3)
+        src.stop()
+
+    t = threading.Thread(target=rotate_then_stop)
+    t.start()
+    gr, gc, gv = _collect(src)
+    t.join(timeout=10)
+    np.testing.assert_array_equal(gr, r)  # each record exactly once
+    np.testing.assert_array_equal(gv, v)
+    assert src.malformed == 0
+
+
+def test_file_source_rotation_parses_unterminated_old_tail(tmp_path):
+    """A complete final record missing only its newline at the moment of
+    rotation is delivered with the same final-EOF convention as stop(),
+    not counted malformed and dropped."""
+    path = tmp_path / "t.tsv"
+    path.write_bytes(b"1\t1\t1.0\n")
+    src = FileTailSource(str(path), follow=True, poll_s=0.01)
+
+    def rotate_then_stop():
+        time.sleep(0.15)
+        with open(path, "ab") as f:
+            f.write(b"2\t2\t2.0")  # complete record, no trailing newline
+        path.rename(tmp_path / "t.tsv.1")
+        path.write_bytes(b"3\t3\t3.0\n")
+        time.sleep(0.3)
+        src.stop()
+
+    t = threading.Thread(target=rotate_then_stop)
+    t.start()
+    gr, _, _ = _collect(src)
+    t.join(timeout=10)
+    np.testing.assert_array_equal(gr, [1, 2, 3])
+    assert src.malformed == 0
 
 
 # ---------------------------------------------------------------------------
