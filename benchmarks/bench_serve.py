@@ -97,7 +97,7 @@ def run_raw(sess: d4m.D4MStream, routed, batch: int) -> tuple[float, float]:
     return len(routed) * batch / dt, dt
 
 
-def run_served(sess: d4m.D4MStream, flat, batch: int) -> tuple[float, float, dict]:
+def run_served(sess: d4m.D4MStream, flat, batch: int):
     """Timed full serve loop from a pre-materialized source."""
     r, c, v = flat
     # warmup/compile through the same path, then reset state (compiled fns
@@ -167,13 +167,13 @@ def main(
         print(
             f"serve,served,k={k},rate={served_rate:,.0f}/s,"
             f"wall_s={served_wall:.3f},efficiency={efficiency[k]:.2f},"
-            f"blocked={tel['blocked_events']}", flush=True,
+            f"blocked={tel.blocked_events}", flush=True,
         )
         report.add(
             "served_rate", params=params,
             updates_per_sec=served_rate, wall_s=served_wall,
             efficiency=efficiency[k],
-            blocked_events=int(tel["blocked_events"]),
+            **tel.serve_counters(),
         )
 
         sock_rate, sock_wall = run_socket(sess, flat, batch)

@@ -1,128 +1,24 @@
-"""Benchmark regression gate: diff fresh ``BENCH_<section>.json`` artifacts
-against a baseline run (the previous CI artifact, per the ROADMAP convention).
+"""Deprecation shim — the regression gate lives in :mod:`repro.bench.gate`.
 
-For every measurement present in BOTH runs (matched by section + name +
-params) that carries an ``updates_per_sec`` rate:
-
-* drop  > ``--fail`` (default 30%)  -> exit 1 (regression gate trips)
-* drop  > ``--warn`` (default 10%)  -> warning line, exit 0
-* otherwise                         -> ok line
-
-Boolean ``passed`` verdicts regressing from true to false also trip the
-gate (a shape/structure property broke, not just a rate).
-
-A missing/empty/unreadable baseline exits 0 with a ``baseline-established``
-line — the first run on a branch, or an expired artifact, must not block CI;
-the fresh artifacts it uploads become the next run's baseline.  Sections are
-matched purely by the ``reporting.py`` schema (section + name + params), so
-any new ``BENCH_<section>.json`` a benchmark emits is covered automatically
-— no gate changes needed per benchmark (asserted by
-``tests/benchmarks/test_regression_gate.py``).
-
-Usage:
-  python -m benchmarks.regression_gate --baseline bench-baseline \
-      --fresh bench-artifacts [--warn 0.10] [--fail 0.30]
+``python -m benchmarks.regression_gate --baseline <dir> --fresh <dir>``
+keeps its exact legacy contract (single-baseline diff, same CSV lines, same
+exit codes): the baseline directory is folded in as a one-entry history, so
+the legacy single-sample comparison is just the trend gate with a window of
+size 1.  New code (and CI) should run ``python -m repro.bench.gate`` with
+``--history benchmarks/history/perf_history.jsonl`` to gate against the
+rolling-window trend instead of one noisy previous run.
 """
-from __future__ import annotations
-
-import argparse
-import glob
-import json
-import os
 import sys
-from typing import Dict, Tuple
 
+from repro.bench.gate import (  # noqa: F401
+    GateFinding,
+    GateResult,
+    gate_run,
+    load_measurements,
+    main,
+)
 
-def _key(section: str, m: dict) -> Tuple:
-    params = tuple(sorted((k, repr(v)) for k, v in (m.get("params") or {}).items()))
-    return (section, m.get("name"), params)
-
-
-def load_measurements(dir_path: str) -> Dict[Tuple, dict]:
-    out: Dict[Tuple, dict] = {}
-    for path in sorted(glob.glob(os.path.join(dir_path, "BENCH_*.json"))):
-        try:
-            with open(path) as f:
-                payload = json.load(f)
-        except (OSError, json.JSONDecodeError) as e:
-            print(f"gate,unreadable,{path},{e}")
-            continue
-        section = payload.get("section", os.path.basename(path))
-        for m in payload.get("measurements", []):
-            out[_key(section, m)] = m
-    return out
-
-
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline", required=True,
-                    help="directory with the previous run's BENCH_*.json")
-    ap.add_argument("--fresh", required=True,
-                    help="directory with this run's BENCH_*.json")
-    ap.add_argument("--warn", type=float, default=0.10,
-                    help="rate-drop fraction that warns (default 0.10)")
-    ap.add_argument("--fail", type=float, default=0.30,
-                    help="rate-drop fraction that fails (default 0.30)")
-    args = ap.parse_args(argv)
-
-    fresh = load_measurements(args.fresh)
-    if not fresh:
-        print(f"gate,error,no fresh BENCH_*.json under {args.fresh}")
-        return 1
-    baseline = load_measurements(args.baseline) if os.path.isdir(args.baseline) else {}
-    if not baseline:
-        # first run on a branch / expired artifact: a clean pass, and this
-        # run's uploaded artifacts become the baseline for the next one
-        print(
-            f"gate,baseline-established,{len(fresh)} fresh measurement(s), "
-            f"no baseline under {args.baseline} - nothing to compare"
-        )
-        print("gate,verdict,PASS")
-        return 0
-
-    failures, warnings_, compared = [], [], 0
-    for key, fm in sorted(fresh.items()):
-        bm = baseline.get(key)
-        if bm is None:
-            continue
-        params = fm.get("params") or {}
-        short = ",".join(f"{k}={v}" for k, v in sorted(params.items())[:3])
-        label = f"{key[0]}/{key[1]}" + (f"[{short}]" if short else "")
-        if "updates_per_sec" in fm and "updates_per_sec" in bm:
-            compared += 1
-            base, now = float(bm["updates_per_sec"]), float(fm["updates_per_sec"])
-            if base <= 0:
-                continue
-            drop = (base - now) / base
-            tag = "ok"
-            if drop > args.fail:
-                tag = "FAIL"
-                failures.append(label)
-            elif drop > args.warn:
-                tag = "WARN"
-                warnings_.append(label)
-            print(
-                f"gate,{tag},{label},baseline={base:,.0f}/s,fresh={now:,.0f}/s,"
-                f"drop={drop:+.1%}"
-            )
-        elif "passed" in fm and "passed" in bm:
-            compared += 1
-            if bool(bm["passed"]) and not bool(fm["passed"]):
-                failures.append(label)
-                print(f"gate,FAIL,{label},verdict regressed true -> false")
-            else:
-                print(f"gate,ok,{label},verdict={fm['passed']}")
-
-    print(
-        f"gate,summary,compared={compared},warned={len(warnings_)},"
-        f"failed={len(failures)}"
-    )
-    if failures:
-        print(f"gate,verdict,FAIL,regressions: {', '.join(failures)}")
-        return 1
-    print("gate,verdict,PASS")
-    return 0
-
+__all__ = ["GateFinding", "GateResult", "gate_run", "load_measurements", "main"]
 
 if __name__ == "__main__":
     sys.exit(main())

@@ -1,7 +1,13 @@
-"""Benchmark orchestrator — one section per paper table/figure.
+"""Benchmark orchestrator — config-driven experiments over paper sections.
 
-Prints ``name,...`` CSV lines AND writes ``BENCH_<section>.json`` structured
-results (schema: ``benchmarks/reporting.py``) to ``--json-dir``; sections:
+The canonical entry point is an experiment config::
+
+    python -m benchmarks.run --experiment benchmarks/experiments/ci-smoke.json
+
+which loads a :class:`repro.bench.ExperimentSpec` (sections × engine × K ×
+D × source from one JSON/TOML file; ``matrix`` axes cross-multiply into
+legs) and executes every leg, writing ``BENCH_<section>.json`` per section
+(schema: ``repro.bench.reporting``) plus ``name,...`` CSV lines.  Sections:
   hier            — paper Figs. 4/5 (update rate vs cuts, instantaneous decay)
   scaling         — paper Fig. 6 shape: aggregate rate vs instances, on two
                     axes — D devices (run standalone or with
@@ -16,20 +22,26 @@ results (schema: ``benchmarks/reporting.py``) to ``--json-dir``; sections:
                     feed_efficiency (>= 50% at K=8) verdict + a loopback
                     TCP socket leg
 
-Select sections with ``--sections hier,scaling`` (comma-separated; CI smoke
-uses this to run only the cheap sections) or the legacy single ``--section``.
-
-Scale: laptop-size defaults (--full restores paper-scale streams; --smoke
-shrinks everything for CI).
+The legacy flags (``--section hier``, ``--sections hier,scaling``,
+``--smoke``, ``--full``) still work as a deprecation shim: they synthesize
+the equivalent spec via ``ExperimentSpec.from_legacy`` with the exact
+historical parameter values, so archived rate trajectories stay comparable.
+Prefer a committed config file for anything you run twice.
 """
 import argparse
 import os
 import sys
 
-SECTIONS = ("hier", "kernels", "embed", "scaling", "cascade_kernel", "serve")
+from repro.bench.experiments import (  # noqa: F401  (SECTIONS re-exported)
+    SECTIONS,
+    ExperimentError,
+    ExperimentSpec,
+    run_spec,
+)
 
 
 def parse_sections(args: argparse.Namespace) -> set:
+    """Legacy section selection (kept for callers importing this helper)."""
     if args.sections:
         chosen = {s.strip() for s in args.sections.split(",") if s.strip()}
         bad = chosen - set(SECTIONS)
@@ -43,8 +55,34 @@ def parse_sections(args: argparse.Namespace) -> set:
     return {args.section}
 
 
+def build_spec(args: argparse.Namespace) -> ExperimentSpec:
+    if args.experiment:
+        if args.sections or args.section != "all" or args.smoke or args.full:
+            raise SystemExit(
+                "--experiment replaces --section/--sections/--smoke/--full; "
+                "put the legs in the config file instead"
+            )
+        return ExperimentSpec.from_file(args.experiment)
+    if args.sections or args.section != "all" or args.smoke or args.full:
+        print(
+            "run,deprecated,--section/--sections/--smoke/--full are legacy; "
+            "use --experiment <config.json> (see benchmarks/experiments/)",
+            file=sys.stderr,
+        )
+    # stable leg order: the historical dispatch order, not the set's
+    chosen = parse_sections(args)
+    ordered = [s for s in ("hier", "kernels", "embed", "scaling",
+                           "cascade_kernel", "serve") if s in chosen]
+    return ExperimentSpec.from_legacy(
+        ordered, smoke=args.smoke, full=args.full, json_dir=args.json_dir
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--experiment", default=None, metavar="CONFIG",
+                    help="experiment config (JSON or TOML) defining the legs "
+                         "to run; replaces the legacy section flags")
     ap.add_argument("--section", default="all",
                     choices=["all", *SECTIONS])
     ap.add_argument("--sections", default=None,
@@ -58,34 +96,11 @@ def main() -> None:
     args = ap.parse_args()
     if args.json_dir:
         os.environ["BENCH_JSON_DIR"] = args.json_dir
-    run = parse_sections(args)
-
-    if "hier" in run:
-        from benchmarks import bench_hier_update
-        if args.full:
-            bench_hier_update.main(total_edges=100_000_000, group_size=100_000, scale=26)
-        elif args.smoke:
-            bench_hier_update.main(total_edges=80_000, group_size=2_000, scale=14)
-        else:
-            bench_hier_update.main()
-    if "kernels" in run:
-        from benchmarks import bench_kernels
-        bench_kernels.main(smoke=args.smoke)
-    if "embed" in run:
-        from benchmarks import bench_embed_grad
-        bench_embed_grad.main(smoke=args.smoke)
-    if "scaling" in run:
-        from benchmarks import bench_scaling
-        if args.smoke:
-            bench_scaling.main(k_values=(1, 8), groups=5, device_sweep=False)
-        else:
-            bench_scaling.main()
-    if "cascade_kernel" in run:
-        from benchmarks import bench_cascade_kernel
-        bench_cascade_kernel.main(smoke=args.smoke)
-    if "serve" in run:
-        from benchmarks import bench_serve
-        bench_serve.main(smoke=args.smoke)
+    try:
+        spec = build_spec(args)
+    except ExperimentError as e:
+        raise SystemExit(str(e))
+    run_spec(spec, json_dir=args.json_dir)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,109 @@
+"""``repro.bench`` — the fleet-grade perf-observability plane.
+
+The paper's claim is a *measured rate trajectory* (40k updates/s per
+instance composed into 1.9B/s across a fleet); its follow-ups show those
+numbers are only trustworthy when rates are tracked per-configuration
+across versions and scales.  This subsystem is that measurement plane:
+
+* :mod:`~repro.bench.models` — dataclass-validated, schema-versioned
+  measurement models (``Measurement`` / ``SectionRun`` / ``RunRecord``);
+* :mod:`~repro.bench.reporting` — the ``BENCH_<section>.json`` artifact
+  writer every ``benchmarks/bench_*`` uses;
+* :mod:`~repro.bench.parsers` — sweep multi-leg CI artifact trees into one
+  normalized :class:`RunRecord`;
+* :mod:`~repro.bench.history` — the committed perf-history file
+  (``benchmarks/history/perf_history.jsonl``), one record per CI run;
+* :mod:`~repro.bench.gate` — the trend-based regression gate: every fresh
+  measurement vs the rolling-window median of its own history
+  (warn >10% / fail >30% below trend; verdict true→false fails; empty
+  history = clean baseline-established pass);
+* :mod:`~repro.bench.experiments` — config-driven multi-leg experiment
+  orchestration (``ExperimentSpec``: sections × engine × K × D × source
+  from one JSON/TOML config; ``benchmarks/run.py --experiment`` drives it);
+* :mod:`~repro.bench.report` — ``BENCH_report.{json,md}``: updates/s per
+  engine × K × D × source across the repo's life.
+"""
+from .models import (  # noqa: F401
+    HISTORY_SCHEMA_VERSION,
+    SECTION_SCHEMA_VERSION,
+    Measurement,
+    ModelError,
+    NormalizedMeasurement,
+    RunRecord,
+    SectionRun,
+    params_key,
+)
+from .reporting import BenchmarkReport, git_branch, git_commit_hash  # noqa: F401
+from .parsers import (  # noqa: F401
+    find_bench_files,
+    leg_label,
+    normalize_dir,
+    normalize_run,
+    parse_section_file,
+    sweep_section_runs,
+)
+from .history import (  # noqa: F401
+    DEFAULT_HISTORY_RELPATH,
+    append_fresh_artifacts,
+    append_run,
+    default_history_path,
+    load_history,
+)
+from .gate import GateFinding, GateResult, gate_run, load_measurements  # noqa: F401
+from .experiments import (  # noqa: F401
+    SECTIONS,
+    ExperimentError,
+    ExperimentLeg,
+    ExperimentSpec,
+    run_spec,
+    validate_leg_params,
+)
+from .report import (  # noqa: F401
+    RateSeries,
+    build_series,
+    measurement_dims,
+    report_markdown,
+    report_payload,
+    write_report,
+)
+
+__all__ = [
+    "BenchmarkReport",
+    "DEFAULT_HISTORY_RELPATH",
+    "ExperimentError",
+    "ExperimentLeg",
+    "ExperimentSpec",
+    "GateFinding",
+    "GateResult",
+    "HISTORY_SCHEMA_VERSION",
+    "Measurement",
+    "ModelError",
+    "NormalizedMeasurement",
+    "RateSeries",
+    "RunRecord",
+    "SECTIONS",
+    "SECTION_SCHEMA_VERSION",
+    "SectionRun",
+    "append_fresh_artifacts",
+    "append_run",
+    "build_series",
+    "default_history_path",
+    "find_bench_files",
+    "gate_run",
+    "git_branch",
+    "git_commit_hash",
+    "leg_label",
+    "load_history",
+    "load_measurements",
+    "measurement_dims",
+    "normalize_dir",
+    "normalize_run",
+    "params_key",
+    "parse_section_file",
+    "report_markdown",
+    "report_payload",
+    "run_spec",
+    "sweep_section_runs",
+    "validate_leg_params",
+    "write_report",
+]

@@ -1,0 +1,154 @@
+"""Structured benchmark output: ``BENCH_<section>.json`` alongside the CSV.
+
+Canonical home of the artifact writer (``benchmarks/reporting.py`` is a
+thin shim).  Schema loosely follows tt-github-actions'
+``CompleteBenchmarkRun``: one run record with git/host provenance plus a
+flat ``measurements`` list, so CI can upload the files as artifacts, the
+perf-history appender (:mod:`repro.bench.history`) can normalize them, and
+the trend gate can diff runs by key:
+
+    {
+      "schema_version": 1,
+      "section": "scaling",
+      "git_commit_hash": "<sha or 'unknown'>",
+      "git_branch": "<branch or 'unknown'>",
+      "run_start_ts": "2026-07-30T12:00:00+00:00",
+      "run_end_ts": "...",
+      "host": {"hostname": ..., "backend": "cpu", "device_count": 8,
+               "jax_version": "0.4.37"},
+      "ci_run_id": "1234567890",        # GITHUB_RUN_ID; absent locally
+      "measurements": [
+        {"name": "packed_rate", "params": {"k_per_device": 8, ...},
+         "updates_per_sec": 1.2e7, "wall_s": 0.41, ...extras}
+      ]
+    }
+
+Every ``bench_*.main`` builds a :class:`BenchmarkReport`, ``add()``s one
+measurement per CSV line it prints, and ``write()``s on exit.  The output
+directory is ``--json-dir`` via ``benchmarks.run`` (environment variable
+``BENCH_JSON_DIR``; default: current directory).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import platform
+import subprocess
+from datetime import datetime, timezone
+from typing import Any, Dict, List
+
+from .models import SECTION_SCHEMA_VERSION as SCHEMA_VERSION  # noqa: F401
+
+
+def _git(*args: str) -> str:
+    try:
+        out = subprocess.run(
+            ["git", *args],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True,
+            text=True,
+            timeout=10,
+        )
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return ""
+
+
+def git_commit_hash() -> str:
+    return os.environ.get("GITHUB_SHA") or _git("rev-parse", "HEAD") or "unknown"
+
+
+def git_branch() -> str:
+    """The branch the run measures, robust to detached/CI checkouts.
+
+    ``GITHUB_REF_NAME`` wins (actions check out a detached SHA, where git
+    itself can only say ``HEAD``); a local detached checkout likewise
+    reports the literal ``HEAD``, which is not a branch — fall through to
+    ``unknown`` rather than let history entries fork under a fake branch
+    name.
+    """
+    env = os.environ.get("GITHUB_REF_NAME")
+    if env:
+        return env
+    branch = _git("rev-parse", "--abbrev-ref", "HEAD")
+    if branch and branch != "HEAD":
+        return branch
+    return "unknown"
+
+
+def _now() -> str:
+    return datetime.now(timezone.utc).isoformat(timespec="seconds")
+
+
+def _host_info() -> Dict[str, Any]:
+    info: Dict[str, Any] = {
+        "hostname": platform.node(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+    }
+    try:
+        import jax
+
+        info["jax_version"] = jax.__version__
+        info["backend"] = jax.default_backend()
+        info["device_count"] = jax.device_count()
+    except Exception:  # pragma: no cover - jax import should never fail here
+        pass
+    return info
+
+
+@dataclasses.dataclass
+class BenchmarkReport:
+    """Collects one section's measurements and serializes them to JSON."""
+
+    section: str
+    measurements: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    run_start_ts: str = dataclasses.field(default_factory=_now)
+
+    def add(
+        self,
+        name: str,
+        params: Dict[str, Any] | None = None,
+        updates_per_sec: float | None = None,
+        wall_s: float | None = None,
+        **extra: Any,
+    ) -> None:
+        m: Dict[str, Any] = {"name": name, "params": dict(params or {})}
+        if updates_per_sec is not None:
+            m["updates_per_sec"] = float(updates_per_sec)
+        if wall_s is not None:
+            m["wall_s"] = float(wall_s)
+        m.update(extra)
+        self.measurements.append(m)
+
+    def payload(self) -> Dict[str, Any]:
+        payload = {
+            "schema_version": SCHEMA_VERSION,
+            "section": self.section,
+            "git_commit_hash": git_commit_hash(),
+            "git_branch": git_branch(),
+            "run_start_ts": self.run_start_ts,
+            "run_end_ts": _now(),
+            "host": _host_info(),
+            "measurements": self.measurements,
+        }
+        # tie the artifact back to the CI run that produced it (absent in
+        # local runs; measurement identity keys on section+leg+name+params)
+        ci_run_id = os.environ.get("GITHUB_RUN_ID")
+        if ci_run_id:
+            payload["ci_run_id"] = ci_run_id
+        return payload
+
+    def write(self, out_dir: str | None = None) -> str:
+        """Write ``BENCH_<section>.json``; returns the path written."""
+        out_dir = out_dir or os.environ.get("BENCH_JSON_DIR") or "."
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"BENCH_{self.section}.json")
+        with open(path, "w") as f:
+            json.dump(self.payload(), f, indent=2)
+            f.write("\n")
+        print(f"json,section={self.section},path={path}", flush=True)
+        return path

@@ -10,6 +10,7 @@ the two so the canonical experiments are runnable in three lines::
     sess = repro.d4m.D4MStream(BENCH.to_session())
 """
 import dataclasses
+import warnings
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,9 +39,22 @@ class WorkloadConfig:
         return StreamConfig(**kw)
 
 
-# Backwards-compatible alias (this module predates repro.d4m.StreamConfig,
-# which now owns the "StreamConfig" name repo-wide).
-StreamConfig = WorkloadConfig
+def __getattr__(name):
+    # Backwards-compatible alias (this module predates repro.d4m.StreamConfig,
+    # which now owns the "StreamConfig" name repo-wide): importing
+    # ``StreamConfig`` from here still hands back WorkloadConfig, with a
+    # warning pointing at the two real names.
+    if name == "StreamConfig":
+        warnings.warn(
+            "repro.configs.d4m_stream.StreamConfig is deprecated: the "
+            "workload config here is WorkloadConfig; the session config is "
+            "repro.d4m.StreamConfig",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return WorkloadConfig
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 CONFIG = WorkloadConfig()
 

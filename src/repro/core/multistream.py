@@ -45,6 +45,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import assoc, hierarchical
 from ._compat import shard_map
+from .telemetry import TelemetrySnapshot
 from .assoc import Assoc, PAD
 from .hierarchical import HierAssoc
 from .semiring import PLUS_TIMES, Semiring
@@ -426,13 +427,16 @@ class MultiStreamEngine:
         """One global Assoc: semiring sum of every instance snapshot."""
         return self._merge_fn(int(cap))(self.snapshot(h, cap))
 
-    def telemetry(self, h: HierAssoc) -> dict:
-        """Packed counters for dashboards/benchmarks (host-side values)."""
-        return {
-            "nnz_per_instance": np.asarray(nnz_per_instance(h)),
-            "cascades_per_instance": np.asarray(cascades_per_instance(h)),
-            "overflowed_per_instance": np.asarray(overflowed_per_instance(h)),
-            "nnz_total": int(nnz_total(h)),
-            "n_instances": self.n_instances,
-            "instances_per_device": self.instances_per_device,
-        }
+    def telemetry(self, h: HierAssoc) -> TelemetrySnapshot:
+        """Packed counters for dashboards/benchmarks (host-side values);
+        a typed :class:`~repro.core.telemetry.TelemetrySnapshot` that still
+        reads like the old dict via its mapping shim."""
+        return TelemetrySnapshot(
+            engine="mesh",
+            nnz_per_instance=np.asarray(nnz_per_instance(h)),
+            cascades_per_instance=np.asarray(cascades_per_instance(h)),
+            overflowed_per_instance=np.asarray(overflowed_per_instance(h)),
+            nnz_total=int(nnz_total(h)),
+            n_instances=self.n_instances,
+            instances_per_device=self.instances_per_device,
+        )

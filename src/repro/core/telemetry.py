@@ -1,0 +1,159 @@
+"""One typed telemetry record for every layer of the stack.
+
+Before this module, three ad-hoc dicts described the system's counters:
+``D4MStream.telemetry()`` (per-session device counters),
+``MultiStreamEngine.telemetry()`` (packed per-instance counters) and
+``D4MServer.telemetry()`` (serve-loop host counters).  Benchmarks and tests
+re-plucked string keys from each.  :class:`TelemetrySnapshot` unifies them:
+one dataclass, engine fields + serve fields, where every producer fills the
+fields it owns and leaves the rest ``None``.
+
+Compatibility: the snapshot implements the read-only mapping protocol over
+its *set* fields (``tel["nnz_total"]``, ``"drained" in tel``, ``dict(tel)``
+all behave exactly like the old dicts), so existing call sites keep
+working; ``None`` fields simply don't exist as keys, mirroring how each old
+dict only carried its own counters.  New code should use attributes —
+``tel.nnz_total`` — and benchmarks consume :meth:`serve_counters` /
+:meth:`to_json` instead of re-plucking keys.
+
+Lives in ``repro.core`` (not ``repro.d4m`` or ``repro.serve``) so every
+layer can import it without cycles: core engines, the d4m session facade,
+the serve loop, and ``repro.bench`` measurements.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, List, Optional
+
+import numpy as np
+
+
+def _jsonable(value: Any) -> Any:
+    if isinstance(value, TelemetrySnapshot):
+        return value.to_json()
+    if isinstance(value, np.ndarray):
+        return value.tolist()
+    if isinstance(value, np.generic):
+        return value.item()
+    if isinstance(value, dict):
+        return {str(k): _jsonable(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [_jsonable(v) for v in value]
+    return value
+
+
+@dataclasses.dataclass(eq=False)
+class TelemetrySnapshot:
+    """Counters of one engine/session/serve-loop observation.
+
+    Field groups (each producer sets its own, leaves the rest ``None``):
+
+    * **identity** — ``engine``, ``n_instances``, ``instances_per_device``;
+    * **state counters** (device side, quiescent) — ``nnz_total``,
+      ``overflowed``, ``state_bytes``, plus the single-instance per-layer
+      views (``nnz_per_layer``, ``cascades``) or the packed per-instance
+      views (``nnz_per_instance``, ``cascades_per_instance``,
+      ``overflowed_per_instance``);
+    * **serve counters** (host side, live) — ``records_in`` /
+      ``records_fed`` / ``records_dropped`` and friends, with the exact
+      conservation contract ``records_in == records_fed + records_dropped``
+      after drain/abort;
+    * ``session`` — the nested state snapshot a :class:`ServeReport`
+      carries once the feed loop is quiescent;
+    * ``extras`` — escape hatch for producer-specific values.
+    """
+
+    # identity
+    engine: Optional[str] = None
+    n_instances: Optional[int] = None
+    instances_per_device: Optional[int] = None
+    # state counters (single-instance per-layer or packed per-instance)
+    nnz_total: Optional[int] = None
+    overflowed: Optional[bool] = None
+    state_bytes: Optional[int] = None
+    nnz_per_layer: Optional[List[int]] = None
+    cascades: Optional[Any] = None
+    nnz_per_instance: Optional[Any] = None
+    cascades_per_instance: Optional[Any] = None
+    overflowed_per_instance: Optional[Any] = None
+    # serve-loop host counters
+    records_in: Optional[int] = None
+    records_fed: Optional[int] = None
+    batches_fed: Optional[int] = None
+    records_dropped: Optional[int] = None
+    routing_dropped: Optional[int] = None
+    blocked_events: Optional[int] = None
+    queue_depth: Optional[int] = None
+    pending: Optional[int] = None
+    malformed: Optional[int] = None
+    source_records: Optional[int] = None
+    wall_s: Optional[float] = None
+    ingest_rate: Optional[float] = None
+    checkpoints: Optional[List[Dict[str, int]]] = None
+    drained: Optional[bool] = None
+    # nested state snapshot (ServeReport.telemetry["session"])
+    session: Optional["TelemetrySnapshot"] = None
+    # producer-specific extension point
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # -- mapping-protocol shim (read side of the legacy dicts) ---------------
+    def _set_fields(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        for f in dataclasses.fields(self):
+            if f.name == "extras":
+                continue
+            v = getattr(self, f.name)
+            if v is not None:
+                out[f.name] = v
+        out.update(self.extras)
+        return out
+
+    def __getitem__(self, key: str) -> Any:
+        fields = self._set_fields()
+        if key not in fields:
+            raise KeyError(key)
+        return fields[key]
+
+    def __contains__(self, key: object) -> bool:
+        return key in self._set_fields()
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._set_fields())
+
+    def __len__(self) -> int:
+        return len(self._set_fields())
+
+    def keys(self):
+        return self._set_fields().keys()
+
+    def values(self):
+        return self._set_fields().values()
+
+    def items(self):
+        return self._set_fields().items()
+
+    def get(self, key: str, default: Any = None) -> Any:
+        return self._set_fields().get(key, default)
+
+    # -- consumers -----------------------------------------------------------
+    def serve_counters(self) -> Dict[str, int]:
+        """The scalar serve-loop counters, ready to splat into a benchmark
+        measurement (``report.add(..., **tel.serve_counters())``)."""
+        out: Dict[str, int] = {}
+        for name in (
+            "records_in",
+            "records_fed",
+            "batches_fed",
+            "records_dropped",
+            "blocked_events",
+            "malformed",
+        ):
+            v = getattr(self, name)
+            if v is not None:
+                out[name] = int(v)
+        return out
+
+    def to_json(self) -> Dict[str, Any]:
+        """Plain JSON-ready dict (arrays -> lists, nested snapshots
+        recursed) — what the bench layer records."""
+        return {k: _jsonable(v) for k, v in self._set_fields().items()}

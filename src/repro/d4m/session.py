@@ -43,6 +43,7 @@ from repro.core.assoc import Assoc
 from repro.core.hierarchical import HierAssoc
 from repro.core.multistream import MultiStreamEngine
 from repro.core.semiring import PLUS_TIMES, Semiring
+from repro.core.telemetry import TelemetrySnapshot
 
 from .config import CapacityPlan, ServeConfig, StreamConfig
 
@@ -553,28 +554,32 @@ class D4MStream:
             return bool(hierarchical.overflowed(self.state))
         return bool(multistream.overflowed_per_instance(self.state).any())
 
-    def telemetry(self) -> Dict[str, Any]:
-        """Host-side counters for dashboards/benchmarks."""
-        base = {
-            "engine": self.kind,
-            "n_instances": self.n_instances,
-            "instances_per_device": self.k_per_device,
-            "nnz_total": self.nnz(),
-            "overflowed": self.overflowed(),
-            "state_bytes": self.plan.total_bytes,
-        }
+    def telemetry(self) -> TelemetrySnapshot:
+        """Typed device-side counters for dashboards/benchmarks.
+
+        Returns a :class:`repro.core.telemetry.TelemetrySnapshot`; it still
+        reads like the old dict (``tel["nnz_total"]``) via the mapping shim.
+        """
+        snap = TelemetrySnapshot(
+            engine=self.kind,
+            n_instances=self.n_instances,
+            instances_per_device=self.k_per_device,
+            nnz_total=self.nnz(),
+            overflowed=self.overflowed(),
+            state_bytes=self.plan.total_bytes,
+        )
         if self.kind == "single":
-            base["nnz_per_layer"] = [int(l.nnz) for l in self.state.layers]
-            base["cascades"] = np.asarray(self.state.cascades)
+            snap.nnz_per_layer = [int(l.nnz) for l in self.state.layers]
+            snap.cascades = np.asarray(self.state.cascades)
         else:
-            base["nnz_per_instance"] = np.asarray(
+            snap.nnz_per_instance = np.asarray(
                 multistream.nnz_per_instance(self.state)
             )
-            base["cascades_per_instance"] = np.asarray(self.state.cascades)
-            base["overflowed_per_instance"] = np.asarray(
+            snap.cascades_per_instance = np.asarray(self.state.cascades)
+            snap.overflowed_per_instance = np.asarray(
                 multistream.overflowed_per_instance(self.state)
             )
-        return base
+        return snap
 
     @property
     def query(self) -> QueryNamespace:

@@ -27,12 +27,13 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.telemetry import TelemetrySnapshot
 from repro.d4m.config import ServeConfig
 
 from .router import DRAIN, MicrobatchRouter
@@ -42,7 +43,8 @@ from .sources import Source
 @dataclasses.dataclass
 class ServeReport:
     """Outcome of one serve run (final counters; see ``telemetry`` for the
-    full dict, including the session's device-side counters post-drain)."""
+    full :class:`~repro.core.telemetry.TelemetrySnapshot`, including the
+    session's device-side counters nested under ``.session`` post-drain)."""
 
     drained: bool
     records_in: int
@@ -54,7 +56,7 @@ class ServeReport:
     wall_s: float
     ingest_rate: float
     checkpoints: List[Dict[str, int]]
-    telemetry: Dict[str, Any]
+    telemetry: TelemetrySnapshot
 
 
 class D4MServer:
@@ -253,30 +255,37 @@ class D4MServer:
             self.session.wait_checkpoint()
 
     # -- observability -------------------------------------------------------
-    def telemetry(self) -> Dict[str, Any]:
+    def telemetry(self) -> TelemetrySnapshot:
         """Live host-side counters; safe to call from any thread while the
-        server runs (never touches the donated device state)."""
+        server runs (never touches the donated device state).
+
+        Returns a typed :class:`~repro.core.telemetry.TelemetrySnapshot`
+        carrying only the serve-loop fields — the device-side state
+        counters stay ``None`` here (reading them would race the donated
+        buffers); :meth:`report` nests a full state snapshot once the feed
+        loop is quiescent.
+        """
         now = self._t1 or time.monotonic()
         wall = max(now - self._t0, 1e-9) if self._t0 is not None else 0.0
         c = self.router.counters()
-        return {
-            "engine": self.session.kind,
-            "n_instances": self.session.n_instances,
-            "records_in": c["records_in"],
-            "records_fed": self.records_fed,
-            "batches_fed": self.batches_fed,
-            "records_dropped": c["dropped_records"] + self.records_discarded,
-            "routing_dropped": c["routing_dropped"],
-            "blocked_events": c["blocked_events"],
-            "queue_depth": c["queue_depth"],
-            "pending": c["pending"],
-            "malformed": getattr(self.source, "malformed", 0),
-            "source_records": getattr(self.source, "records_out", 0),
-            "wall_s": wall,
-            "ingest_rate": self.records_fed / wall if wall else 0.0,
-            "checkpoints": list(self.checkpoints),
-            "drained": self._drained,
-        }
+        return TelemetrySnapshot(
+            engine=self.session.kind,
+            n_instances=self.session.n_instances,
+            records_in=c["records_in"],
+            records_fed=self.records_fed,
+            batches_fed=self.batches_fed,
+            records_dropped=c["dropped_records"] + self.records_discarded,
+            routing_dropped=c["routing_dropped"],
+            blocked_events=c["blocked_events"],
+            queue_depth=c["queue_depth"],
+            pending=c["pending"],
+            malformed=getattr(self.source, "malformed", 0),
+            source_records=getattr(self.source, "records_out", 0),
+            wall_s=wall,
+            ingest_rate=self.records_fed / wall if wall else 0.0,
+            checkpoints=list(self.checkpoints),
+            drained=self._drained,
+        )
 
     def report(self) -> ServeReport:
         """Final report; call after :meth:`join`/:meth:`run`/:meth:`stop`.
@@ -285,17 +294,17 @@ class D4MServer:
         if not self._done.is_set():
             raise RuntimeError("report() before the server finished; join() first")
         tel = self.telemetry()
-        tel["session"] = self.session.telemetry()
+        tel.session = self.session.telemetry()
         return ServeReport(
             drained=self._drained,
-            records_in=tel["records_in"],
+            records_in=tel.records_in,
             records_fed=self.records_fed,
             batches_fed=self.batches_fed,
-            records_dropped=tel["records_dropped"],
-            blocked_events=tel["blocked_events"],
-            malformed=tel["malformed"],
-            wall_s=tel["wall_s"],
-            ingest_rate=tel["ingest_rate"],
+            records_dropped=tel.records_dropped,
+            blocked_events=tel.blocked_events,
+            malformed=tel.malformed,
+            wall_s=tel.wall_s,
+            ingest_rate=tel.ingest_rate,
             checkpoints=list(self.checkpoints),
             telemetry=tel,
         )

@@ -1,0 +1,74 @@
+"""Shared factories for the repro.bench test suite: artifact payloads on
+the reporting schema, and normalized history records."""
+import json
+import os
+
+from repro.bench import NormalizedMeasurement, RunRecord
+
+
+def section_payload(section, measurements, *, device_count=1, ts="2026-08-01",
+                    commit="c" * 40, branch="main", ci_run_id=None,
+                    jax_version="0.4.37"):
+    payload = {
+        "schema_version": 1,
+        "section": section,
+        "git_commit_hash": commit,
+        "git_branch": branch,
+        "run_start_ts": f"{ts}T00:00:00+00:00",
+        "run_end_ts": f"{ts}T00:05:00+00:00",
+        "host": {
+            "hostname": "test",
+            "jax_version": jax_version,
+            "backend": "cpu",
+            "device_count": device_count,
+        },
+        "measurements": measurements,
+    }
+    if ci_run_id is not None:
+        payload["ci_run_id"] = str(ci_run_id)
+    return payload
+
+
+def write_payload(dir_path, payload, filename=None):
+    os.makedirs(dir_path, exist_ok=True)
+    path = os.path.join(
+        str(dir_path), filename or f"BENCH_{payload['section']}.json"
+    )
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    return path
+
+
+def rate(name, updates_per_sec, **params):
+    return {"name": name, "params": params, "updates_per_sec": updates_per_sec}
+
+
+def verdict(name, passed, **params):
+    return {"name": name, "params": params, "passed": passed}
+
+
+def record(run_id, measurements, *, ts="2026-08-01", commit="c" * 40):
+    """One history RunRecord from (section, leg, name, params, rate-or-verdict)
+    NormalizedMeasurement instances."""
+    return RunRecord(
+        run_id=run_id,
+        git_commit_hash=commit,
+        git_branch="main",
+        run_start_ts=f"{ts}T00:00:00+00:00",
+        run_end_ts=f"{ts}T00:05:00+00:00",
+        jax_version="0.4.37",
+        backend="cpu",
+        measurements=measurements,
+    ).validate()
+
+
+def nm(section="scaling", leg="d1", name="packed_scaling", params=None,
+       updates_per_sec=None, passed=None):
+    return NormalizedMeasurement(
+        section=section,
+        leg=leg,
+        name=name,
+        params=dict(params or {"k_per_device": 8}),
+        updates_per_sec=updates_per_sec,
+        passed=passed,
+    ).validate()

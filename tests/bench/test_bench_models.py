@@ -1,0 +1,107 @@
+"""Validation-layer tests: malformed payloads must fail loudly at parse
+time, valid ones must round-trip bit-exactly through the JSONL history."""
+import json
+
+import pytest
+
+from repro.bench import (
+    HISTORY_SCHEMA_VERSION,
+    Measurement,
+    ModelError,
+    NormalizedMeasurement,
+    RunRecord,
+    SectionRun,
+    params_key,
+)
+
+from _bench_factories import nm, record, section_payload, rate
+
+
+# ----------------------------------------------------------- params identity
+def test_params_key_is_order_free():
+    assert params_key({"a": 1, "b": (1, 2)}) == params_key({"b": (1, 2), "a": 1})
+
+
+def test_params_key_distinguishes_value_types():
+    # 1 vs "1" are different configs; repr() keeps them apart
+    assert params_key({"k": 1}) != params_key({"k": "1"})
+
+
+# ------------------------------------------------------------- measurements
+def test_measurement_rejects_bad_shapes():
+    with pytest.raises(ModelError):
+        Measurement(name="").validate()
+    with pytest.raises(ModelError):
+        Measurement(name="x", updates_per_sec=-1.0).validate()
+    with pytest.raises(ModelError):
+        Measurement(name="x", updates_per_sec=True).validate()
+    with pytest.raises(ModelError):
+        Measurement(name="x", passed="yes").validate()
+    with pytest.raises(ModelError):
+        Measurement(name="x", wall_s=-0.1).validate()
+
+
+def test_measurement_from_payload_collects_extras():
+    m = Measurement.from_payload(
+        {"name": "served_rate", "params": {"k": 8}, "updates_per_sec": 1e6,
+         "efficiency": 0.9, "blocked_events": 3}
+    )
+    assert m.extras == {"efficiency": 0.9, "blocked_events": 3}
+    out = m.to_json()
+    assert out["efficiency"] == 0.9 and out["updates_per_sec"] == 1e6
+
+
+# ------------------------------------------------------------- section runs
+def test_section_run_requires_section_and_schema_version():
+    with pytest.raises(ModelError):
+        SectionRun.from_payload({"measurements": []})
+    bad = section_payload("scaling", [])
+    bad["schema_version"] = 99
+    with pytest.raises(ModelError):
+        SectionRun.from_payload(bad)
+
+
+def test_section_run_host_properties():
+    run = SectionRun.from_payload(
+        section_payload("scaling", [rate("r", 1.0)], device_count=8)
+    )
+    assert run.device_count == 8
+    assert run.jax_version == "0.4.37"
+    assert run.backend == "cpu"
+
+
+# -------------------------------------------------------------- run records
+def test_run_record_roundtrips_through_jsonl():
+    rec = record(
+        "run-1",
+        [
+            nm(updates_per_sec=1e6),
+            nm(name="verdict", params={}, passed=True),
+        ],
+    )
+    back = RunRecord.from_json(json.loads(rec.to_jsonl()))
+    assert back.to_jsonl() == rec.to_jsonl()
+    assert back.run_id == "run-1"
+    assert back.jax_version == "0.4.37"
+    assert back.schema_version == HISTORY_SCHEMA_VERSION
+    assert [m.key() for m in back.measurements] == [
+        m.key() for m in rec.measurements
+    ]
+
+
+def test_run_record_rejects_duplicate_keys():
+    m = nm(updates_per_sec=1e6)
+    with pytest.raises(ModelError, match="duplicate"):
+        record("run-1", [m, nm(updates_per_sec=2e6)])
+
+
+def test_normalized_measurement_key_includes_leg():
+    a = nm(leg="d1", updates_per_sec=1.0)
+    b = nm(leg="d8", updates_per_sec=1.0)
+    assert a.key() != b.key()
+    assert a.key()[:1] + a.key()[2:] == b.key()[:1] + b.key()[2:]
+
+
+def test_normalized_measurement_from_json_validates():
+    with pytest.raises(ModelError):
+        NormalizedMeasurement.from_json({"section": "", "name": "x"})

@@ -1,0 +1,168 @@
+"""ExperimentSpec tests: config parsing, matrix expansion, legacy-flag
+synthesis, and upfront param validation against real section signatures."""
+import json
+import os
+
+import pytest
+
+REPO_ROOT = os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+
+from repro.bench import (
+    SECTIONS,
+    ExperimentError,
+    ExperimentSpec,
+    validate_leg_params,
+)
+
+
+def test_sections_tuple_matches_run_py():
+    from benchmarks.run import SECTIONS as RUN_SECTIONS
+
+    assert RUN_SECTIONS == SECTIONS == (
+        "hier", "kernels", "embed", "scaling", "cascade_kernel", "serve"
+    )
+
+
+# ------------------------------------------------------------- from_dict
+def test_from_dict_defaults_merge_under_leg_params():
+    spec = ExperimentSpec.from_dict(
+        {
+            "name": "x",
+            "defaults": {"smoke": True, "batch": 128},
+            "legs": [{"section": "serve", "params": {"batch": 256}}],
+        }
+    )
+    assert spec.legs[0].kwargs() == {"smoke": True, "batch": 256}
+
+
+def test_matrix_cross_product_expands_legs():
+    spec = ExperimentSpec.from_dict(
+        {
+            "name": "sweep",
+            "legs": [
+                {
+                    "section": "serve",
+                    "matrix": {"batch": [128, 256], "scale": [14, 16]},
+                }
+            ],
+        }
+    )
+    assert len(spec.legs) == 4
+    combos = {(l.kwargs()["batch"], l.kwargs()["scale"]) for l in spec.legs}
+    assert combos == {(128, 14), (128, 16), (256, 14), (256, 16)}
+    # leg labels are distinct and carry the combo
+    assert len({l.label for l in spec.legs}) == 4
+    assert any("batch=128" in l.label and "scale=16" in l.label
+               for l in spec.legs)
+
+
+def test_lists_freeze_to_tuples_for_hashable_legs():
+    spec = ExperimentSpec.from_dict(
+        {"name": "x",
+         "legs": [{"section": "scaling", "params": {"k_values": [1, 8]}}]}
+    )
+    assert spec.legs[0].kwargs()["k_values"] == (1, 8)
+    hash(spec.legs[0])  # frozen dataclass stays hashable
+
+
+@pytest.mark.parametrize(
+    "payload, match",
+    [
+        ({"name": "x"}, "legs"),
+        ({"name": "x", "legs": []}, "legs"),
+        ({"name": "x", "legs": [{"section": "warp"}]}, "unknown section"),
+        ({"name": "x", "legs": [{"section": "hier", "bogus": 1}]},
+         "unknown keys"),
+        ({"name": "x", "typo_key": 1, "legs": [{"section": "hier"}]},
+         "unknown top-level"),
+        ({"name": "x", "legs": [{"section": "hier", "matrix": {"k": []}}]},
+         "non-empty list"),
+    ],
+)
+def test_from_dict_rejects_malformed(payload, match):
+    with pytest.raises(ExperimentError, match=match):
+        ExperimentSpec.from_dict(payload)
+
+
+def test_from_file_json(tmp_path):
+    path = tmp_path / "exp.json"
+    path.write_text(json.dumps(
+        {"name": "file-exp", "legs": [{"section": "hier"}]}
+    ))
+    spec = ExperimentSpec.from_file(str(path))
+    assert spec.name == "file-exp"
+    assert spec.source == str(path)
+
+
+def test_from_file_unreadable(tmp_path):
+    with pytest.raises(ExperimentError, match="unreadable"):
+        ExperimentSpec.from_file(str(tmp_path / "nope.json"))
+
+
+def test_committed_ci_configs_parse_and_validate():
+    """The experiment configs CI actually runs must always load and pass
+    signature validation."""
+    for cfg in ("benchmarks/experiments/ci-smoke.json",
+                "benchmarks/experiments/ci-smoke-d8.json",
+                "benchmarks/experiments/serve-sweep.json"):
+        spec = ExperimentSpec.from_file(os.path.join(REPO_ROOT, cfg))
+        for leg in spec.legs:
+            validate_leg_params(leg)
+
+
+# ------------------------------------------------------------ legacy shim
+def test_from_legacy_preserves_exact_smoke_params():
+    spec = ExperimentSpec.from_legacy(["hier", "scaling", "serve"], smoke=True)
+    by_section = {l.section: l.kwargs() for l in spec.legs}
+    assert by_section["hier"] == {
+        "total_edges": 80_000, "group_size": 2_000, "scale": 14
+    }
+    assert by_section["scaling"] == {
+        "k_values": (1, 8), "groups": 5, "device_sweep": False
+    }
+    assert by_section["serve"] == {"smoke": True}
+
+
+def test_from_legacy_full_and_default():
+    full = ExperimentSpec.from_legacy(["hier"], full=True)
+    assert full.legs[0].kwargs() == {
+        "total_edges": 100_000_000, "group_size": 100_000, "scale": 26
+    }
+    default = ExperimentSpec.from_legacy(["hier"])
+    assert default.legs[0].kwargs() == {}
+
+
+def test_from_legacy_rejects_unknown_section():
+    with pytest.raises(ExperimentError, match="unknown section"):
+        ExperimentSpec.from_legacy(["warp"])
+
+
+# ------------------------------------------------- signature validation
+def test_validate_leg_params_rejects_typo():
+    spec = ExperimentSpec.from_dict(
+        {"name": "x", "legs": [{"section": "serve", "params": {"nope": 1}}]}
+    )
+    with pytest.raises(ExperimentError, match="does not accept"):
+        validate_leg_params(spec.legs[0])
+
+
+def test_validate_leg_params_accepts_real_signatures():
+    spec = ExperimentSpec.from_legacy(list(SECTIONS), smoke=True)
+    for leg in spec.legs:
+        validate_leg_params(leg)
+
+
+# ------------------------------------------------------------ run.py CLI
+def test_run_py_experiment_flag_conflicts_with_legacy(tmp_path, monkeypatch):
+    import benchmarks.run as run_mod
+
+    path = tmp_path / "exp.json"
+    path.write_text(json.dumps({"name": "x", "legs": [{"section": "hier"}]}))
+    monkeypatch.setattr(
+        "sys.argv",
+        ["run.py", "--experiment", str(path), "--sections", "hier"],
+    )
+    with pytest.raises(SystemExit, match="replaces"):
+        run_mod.main()

@@ -1,0 +1,98 @@
+"""Perf-history file tests: append/load round-trip, per-run-id idempotency,
+and corrupt-line tolerance."""
+import json
+
+import pytest
+
+from repro.bench import ModelError, append_fresh_artifacts, append_run, load_history
+from repro.bench.history import main as history_main
+
+from _bench_factories import nm, rate, record, section_payload, write_payload
+
+
+def test_append_and_load_roundtrip(tmp_path):
+    hist = str(tmp_path / "perf_history.jsonl")
+    r1 = record("run-1", [nm(updates_per_sec=1e6)], ts="2026-08-01")
+    r2 = record("run-2", [nm(updates_per_sec=2e6)], ts="2026-08-02")
+    append_run(r1, hist)
+    append_run(r2, hist)
+    records, problems = load_history(hist)
+    assert problems == []
+    assert [r.run_id for r in records] == ["run-1", "run-2"]  # oldest first
+    assert records[1].measurements[0].updates_per_sec == 2e6
+
+
+def test_missing_history_is_empty_not_error(tmp_path):
+    records, problems = load_history(str(tmp_path / "nope.jsonl"))
+    assert records == [] and problems == []
+
+
+def test_corrupt_line_tolerated_and_reported(tmp_path):
+    hist = tmp_path / "perf_history.jsonl"
+    append_run(record("run-1", [nm(updates_per_sec=1e6)]), str(hist))
+    with open(hist, "a") as f:
+        f.write("{torn line\n")
+    append_run(record("run-2", [nm(updates_per_sec=2e6)]), str(hist))
+    records, problems = load_history(str(hist))
+    assert [r.run_id for r in records] == ["run-1", "run-2"]
+    assert len(problems) == 1 and ":2:" in problems[0]
+    with pytest.raises(ModelError):
+        load_history(str(hist), strict=True)
+
+
+def test_append_fresh_artifacts_idempotent_per_run_id(tmp_path):
+    fresh = tmp_path / "fresh"
+    write_payload(
+        fresh,
+        section_payload("scaling", [rate("packed_scaling", 1e6, k_per_device=8)],
+                        ci_run_id="4242"),
+    )
+    hist = str(tmp_path / "perf_history.jsonl")
+    append_fresh_artifacts(str(fresh), hist)
+    append_fresh_artifacts(str(fresh), hist)  # re-triggered workflow
+    records, _ = load_history(hist)
+    assert len(records) == 1
+    assert records[0].run_id == "4242"
+    # explicit opt-out appends a duplicate
+    append_fresh_artifacts(str(fresh), hist, dedupe_run_id=False)
+    records, _ = load_history(hist)
+    assert len(records) == 2
+
+
+def test_history_lines_are_sorted_json(tmp_path):
+    """History lines must be deterministic (sort_keys) so CI commits diff
+    cleanly."""
+    hist = str(tmp_path / "perf_history.jsonl")
+    append_run(record("run-1", [nm(updates_per_sec=1e6)]), hist)
+    line = open(hist).read().strip()
+    payload = json.loads(line)
+    assert line == json.dumps(payload, sort_keys=True)
+
+
+def test_cli_append_and_show(tmp_path, capsys):
+    fresh = tmp_path / "fresh"
+    write_payload(
+        fresh,
+        section_payload("serve", [rate("served_rate", 9e5, k_per_device=8)]),
+    )
+    hist = str(tmp_path / "perf_history.jsonl")
+    rc = history_main(["append", "--fresh", str(fresh), "--history", hist,
+                       "--run-id", "test-run"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "history,appended,run_id=test-run" in out
+    assert "sections=serve" in out
+    rc = history_main(["show", "--history", hist])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "history,1 run(s)" in out
+    assert "run_id=test-run" in out
+
+
+def test_cli_append_empty_tree_errors(tmp_path, capsys):
+    rc = history_main(
+        ["append", "--fresh", str(tmp_path / "empty"),
+         "--history", str(tmp_path / "h.jsonl")]
+    )
+    assert rc == 1
+    assert "history,error" in capsys.readouterr().out

@@ -1,0 +1,185 @@
+"""Artifact-sweep tests: multi-leg trees normalize into one RunRecord, and
+every section shape the benches currently emit parses (schema coverage)."""
+import os
+
+import pytest
+
+from repro.bench import (
+    ModelError,
+    find_bench_files,
+    leg_label,
+    normalize_dir,
+    normalize_run,
+    parse_section_file,
+    sweep_section_runs,
+)
+
+from _bench_factories import rate, section_payload, verdict, write_payload
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+# ---------------------------------------------------------------- discovery
+def test_find_bench_files_recursive_and_skips_report(tmp_path):
+    write_payload(tmp_path / "d1", section_payload("hier", []))
+    write_payload(tmp_path / "d8", section_payload("scaling", []))
+    (tmp_path / "BENCH_report.json").write_text("{}")  # generator output
+    (tmp_path / "not_bench.json").write_text("{}")
+    found = find_bench_files(str(tmp_path))
+    assert [os.path.basename(p) for p in found] == [
+        "BENCH_hier.json", "BENCH_scaling.json"
+    ]
+
+
+def test_sweep_strict_vs_tolerant(tmp_path):
+    write_payload(tmp_path, section_payload("hier", [rate("r", 1.0)]))
+    (tmp_path / "BENCH_torn.json").write_text("{not json")
+    with pytest.raises(ModelError):
+        sweep_section_runs(str(tmp_path), strict=True)
+    runs, problems = sweep_section_runs(str(tmp_path), strict=False)
+    assert len(runs) == 1 and len(problems) == 1
+    assert "BENCH_torn.json" in problems[0]
+
+
+# ------------------------------------------------------------ normalization
+def test_normalize_multi_leg_tree(tmp_path):
+    # the CI shape: same section, same params, different forced device count
+    write_payload(
+        tmp_path / "benchmark-json-d1",
+        section_payload("scaling", [rate("packed_scaling", 1e6, k_per_device=8)],
+                        device_count=1),
+    )
+    write_payload(
+        tmp_path / "benchmark-json-d8",
+        section_payload("scaling", [rate("packed_scaling", 6e6, k_per_device=8)],
+                        device_count=8, ci_run_id="777"),
+    )
+    record, problems = normalize_dir(str(tmp_path))
+    assert problems == []
+    assert record.run_id == "777"  # ci_run_id wins over local-<commit>
+    assert record.legs() == ("d1", "d8")
+    by_key = record.by_key()
+    assert len(by_key) == 2  # the leg axis keeps the trajectories separate
+    rates = {m.leg: m.updates_per_sec for m in record.measurements}
+    assert rates == {"d1": 1e6, "d8": 6e6}
+
+
+def test_normalize_later_timestamp_wins_collision(tmp_path):
+    old = section_payload("serve", [rate("served_rate", 1e5, k_per_device=8)],
+                          ts="2026-08-01")
+    new = section_payload("serve", [rate("served_rate", 2e5, k_per_device=8)],
+                          ts="2026-08-02")
+    write_payload(tmp_path / "a", old)
+    write_payload(tmp_path / "b", new)
+    record, _ = normalize_dir(str(tmp_path))
+    assert len(record.measurements) == 1
+    assert record.measurements[0].updates_per_sec == 2e5
+
+
+def test_normalize_provenance_first_non_unknown(tmp_path):
+    anon = section_payload("hier", [], commit="unknown", branch="unknown")
+    known = section_payload("scaling", [], commit="a" * 40, ts="2026-08-02")
+    write_payload(tmp_path, anon)
+    write_payload(tmp_path, known)
+    record, _ = normalize_dir(str(tmp_path))
+    assert record.git_commit_hash == "a" * 40
+    assert record.run_id == f"local-{'a' * 12}"
+    # run window spans both artifacts
+    assert record.run_start_ts.startswith("2026-08-01")
+    assert record.run_end_ts.startswith("2026-08-02")
+
+
+def test_normalize_empty_tree_raises(tmp_path):
+    with pytest.raises(ModelError, match="no BENCH"):
+        normalize_dir(str(tmp_path))
+    with pytest.raises(ModelError):
+        normalize_run([])
+
+
+def test_leg_label_from_host_not_directory(tmp_path):
+    payload = section_payload("hier", [], device_count=8)
+    path = write_payload(tmp_path / "renamed-download-dir", payload)
+    run = parse_section_file(path)
+    assert leg_label(run) == "d8"
+    payload_no_host = section_payload("hier", [])
+    del payload_no_host["host"]
+    path2 = write_payload(tmp_path / "x", payload_no_host)
+    assert leg_label(parse_section_file(path2)) == ""
+
+
+# ---------------------------------------------------- schema coverage: every
+# shape the benches emit today parses (keep in sync with benchmarks/bench_*)
+SECTION_SHAPES = {
+    "hier_update": [
+        rate("hier_2level", 1e6, cuts=[100000], total_edges=80000),
+        verdict("verdict_hier_beats_flat", True),
+        verdict("verdict_flat_rate_decays", True),
+    ],
+    "kernels": [
+        rate("merge_add", 1e7, n=4096),
+        rate("sort_dedup", 1e7, n=4096),
+        {"name": "scatter_add", "params": {"V": 1000, "d": 8, "k": 4},
+         "wall_s": 1e-3, "dense_equiv_us": 5.0},
+    ],
+    "embed_grad": [
+        rate("embed_grad", 1e6, V=1000, d=8, tokens_per_microbatch=256,
+             micro=4),
+    ],
+    "scaling": [
+        rate("device_scaling", 1e6, n_devices=8, k_per_device=1, n_instances=8),
+        rate("packed_scaling", 5e6, k_per_device=64, n_devices=8,
+             groups=20, group_size=32, rmat_scale=16),
+        verdict("verdict_rate_increases_with_k", True, k_values=[1, 8, 64]),
+        verdict("update_path_collectives", True, k_per_device=8, n_devices=8),
+        rate("projection_34000_instances", 1.9e9, basis_k=64, basis_devices=8),
+    ],
+    "cascade_kernel": [
+        rate("cascade_step", 2e6, k=8, schedule="0pct", engine="pallas"),
+        rate("cascade_step", 1e6, k=1, schedule="0pct", engine="cond"),
+        {"name": "lane_skip_speedup", "params": {"k": 8}, "speedup": 3.0,
+         "cascades_per_step": 0.0, "passed": True},
+    ],
+    "serve": [
+        rate("raw_engine_rate", 1e6, k_per_device=8, batches=60, batch=256,
+             rmat_scale=14),
+        {"name": "served_rate",
+         "params": {"k_per_device": 8, "batches": 60, "batch": 256,
+                    "rmat_scale": 14},
+         "updates_per_sec": 9e5, "wall_s": 0.1, "efficiency": 0.9,
+         "records_in": 15360, "records_fed": 15360, "batches_fed": 60,
+         "records_dropped": 0, "blocked_events": 0, "malformed": 0},
+        rate("socket_rate", 5e5, k_per_device=8, batches=60, batch=256,
+             rmat_scale=14),
+        {"name": "feed_efficiency",
+         "params": {"k_per_device": 8, "floor": 0.5}, "passed": True,
+         "efficiency": {"1": 0.8, "8": 0.9}},
+    ],
+}
+
+
+@pytest.mark.parametrize("section", sorted(SECTION_SHAPES))
+def test_every_emitted_section_shape_parses(tmp_path, section):
+    path = write_payload(
+        tmp_path, section_payload(section, SECTION_SHAPES[section])
+    )
+    run = parse_section_file(path)
+    assert run.section == section
+    assert len(run.measurements) == len(SECTION_SHAPES[section])
+    record = normalize_run([run])
+    assert len(record.measurements) == len(SECTION_SHAPES[section])
+
+
+def test_committed_seed_artifact_parses():
+    """The real BENCH_scaling.json committed at the repo root (the history
+    seed) must parse under the same models the gate and history use."""
+    path = os.path.join(REPO_ROOT, "BENCH_scaling.json")
+    run = parse_section_file(path)
+    assert run.section == "scaling"
+    assert run.device_count == 8
+    assert leg_label(run) == "d8"
+    record = normalize_run([run])
+    names = {m.name for m in record.measurements}
+    assert {"device_scaling", "packed_scaling",
+            "verdict_rate_increases_with_k"} <= names
+    rates = [m for m in record.measurements if m.updates_per_sec is not None]
+    assert len(rates) >= 5

@@ -1,0 +1,162 @@
+"""Report-generator tests: updates/s per engine × K × D × source aggregated
+across history entries (including the committed seed + a fresh run)."""
+import json
+import os
+
+from repro.bench import (
+    build_series,
+    measurement_dims,
+    report_markdown,
+    report_payload,
+    write_report,
+)
+from repro.bench.report import main as report_main
+
+from _bench_factories import nm, rate, record, section_payload, write_payload
+
+REPO_ROOT = os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+
+
+# ------------------------------------------------------------ dimensions
+def test_dims_from_params_and_leg():
+    m = nm(params={"k_per_device": 64, "n_devices": 8}, updates_per_sec=1.0)
+    assert measurement_dims(m) == {
+        "engine": "mesh", "k": 64, "d": 8, "source": "rmat"
+    }
+    # no n_devices in params: the CI leg label supplies D
+    m2 = nm(leg="d8", params={"k_per_device": 8}, updates_per_sec=1.0)
+    assert measurement_dims(m2)["d"] == 8
+
+
+def test_dims_serve_engine_and_source():
+    raw = nm(section="serve", name="raw_engine_rate",
+             params={"k_per_device": 1}, updates_per_sec=1.0)
+    served = nm(section="serve", name="served_rate",
+                params={"k_per_device": 8}, updates_per_sec=1.0)
+    sock = nm(section="serve", name="socket_rate",
+              params={"k_per_device": 8}, updates_per_sec=1.0)
+    assert measurement_dims(raw) == {
+        "engine": "single", "k": 1, "d": 1, "source": "preroute"
+    }
+    assert measurement_dims(served)["engine"] == "packed"
+    assert measurement_dims(served)["source"] == "array"
+    assert measurement_dims(sock)["source"] == "tcp"
+
+
+def test_dims_section_fallbacks_use_real_emitted_names():
+    # the fallback maps must key on the section names the benches emit
+    # (BenchmarkReport("hier_update") / ("embed_grad"), not the CLI flags)
+    hier = nm(section="hier_update", name="2cut_wide",
+              params={"cuts": (8000, 20000)}, updates_per_sec=1.0)
+    embed = nm(section="embed_grad", name="embed_grad",
+               params={"V": 1000}, updates_per_sec=1.0)
+    assert measurement_dims(hier) == {
+        "engine": "single", "k": 1, "d": 1, "source": "rmat"
+    }
+    assert measurement_dims(embed)["engine"] == "single"
+    assert measurement_dims(embed)["source"] == "tokens"
+
+
+def test_dims_explicit_engine_param_wins():
+    m = nm(section="cascade_kernel", name="cascade_step",
+           params={"k": 8, "engine": "pallas", "schedule": "0pct"},
+           updates_per_sec=1.0)
+    d = measurement_dims(m)
+    assert d["engine"] == "pallas" and d["k"] == 8
+    assert d["source"] == "synthetic"
+
+
+# ------------------------------------------------------------- aggregation
+def _two_runs():
+    return [
+        record("run-1", [nm(updates_per_sec=1.0e6)], ts="2026-08-01"),
+        record("run-2", [nm(updates_per_sec=1.2e6)], ts="2026-08-02"),
+    ]
+
+
+def test_build_series_collects_points_across_runs():
+    series = build_series(_two_runs())
+    assert len(series) == 1
+    s = series[0]
+    assert [p["updates_per_sec"] for p in s.points] == [1.0e6, 1.2e6]
+    assert [p["run_id"] for p in s.points] == ["run-1", "run-2"]
+    assert s.latest() == 1.2e6
+    assert s.points[0]["jax_version"] == "0.4.37"
+
+
+def test_report_payload_shape():
+    payload = report_payload(_two_runs())
+    assert payload["schema_version"] == 1
+    assert payload["n_runs"] == 2
+    (entry,) = payload["series"]
+    # the engine x K x D x source axes ride on every series entry
+    assert {"engine", "k", "d", "source"} <= set(entry)
+    assert entry["n_runs"] == 2
+    assert entry["latest_updates_per_sec"] == 1.2e6
+    assert entry["best_updates_per_sec"] == 1.2e6
+
+
+def test_markdown_table_has_dimension_columns():
+    md = report_markdown(_two_runs())
+    assert "| measurement | engine | K | D | source |" in md
+    assert "scaling/packed_scaling@d1" in md
+
+
+def test_write_report_emits_json_and_md(tmp_path):
+    json_path, md_path = write_report(_two_runs(), str(tmp_path))
+    assert os.path.basename(json_path) == "BENCH_report.json"
+    payload = json.load(open(json_path))
+    assert payload["n_runs"] == 2
+    assert "# Benchmark rate trajectory" in open(md_path).read()
+
+
+# -------------------------------------------- end-to-end: seed + fresh run
+def test_report_from_committed_seed_plus_fresh_artifacts(tmp_path, capsys):
+    """The acceptance path: the committed history (seeded from the real
+    BENCH_scaling.json) plus a fresh artifact tree aggregate into one
+    BENCH_report.json whose series carry engine x K x D x source."""
+    seed_history = os.path.join(
+        REPO_ROOT, "benchmarks", "history", "perf_history.jsonl"
+    )
+    assert os.path.exists(seed_history), "committed history must be seeded"
+
+    fresh = tmp_path / "fresh"
+    write_payload(
+        fresh,
+        section_payload(
+            "scaling",
+            [
+                rate("packed_scaling", 5.5e6, k_per_device=64, n_devices=8,
+                     n_instances=512, groups=20, group_size=32,
+                     rmat_scale=16),
+                rate("device_scaling", 1.1e6, n_devices=8, k_per_device=1,
+                     n_instances=8),
+            ],
+            device_count=8,
+            ci_run_id="999",
+            ts="2026-08-09",
+        ),
+    )
+    out = tmp_path / "report"
+    rc = report_main(
+        ["--history", seed_history, "--fresh", str(fresh), "--out", str(out)]
+    )
+    assert rc == 0
+    assert "report,written,runs=2" in capsys.readouterr().out
+
+    payload = json.load(open(out / "BENCH_report.json"))
+    assert payload["n_runs"] == 2
+    two_point = [s for s in payload["series"] if s["n_runs"] == 2]
+    # the keys measured by both the seed and the fresh run have 2 points
+    assert {(s["section"], s["name"]) for s in two_point} == {
+        ("scaling", "packed_scaling"), ("scaling", "device_scaling")
+    }
+    for s in two_point:
+        assert {"engine", "k", "d", "source"} <= set(s)
+        assert s["engine"] == "mesh" and s["d"] == 8
+        assert len(s["points"]) == 2
+        assert s["points"][-1]["run_id"] == "999"
+    # seed-only keys still report with one point
+    assert any(s["n_runs"] == 1 for s in payload["series"])

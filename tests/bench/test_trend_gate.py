@@ -1,0 +1,190 @@
+"""Trend-gate behaviour: rolling-window median vs fresh sample.
+
+The scenarios the single-baseline gate got wrong are the point here: noise
+around a flat trend must pass, one outlier run must not poison the
+baseline, and a real step change must still trip.
+"""
+import pytest
+
+from repro.bench import gate_run
+from repro.bench.gate import main as gate_main
+
+from _bench_factories import nm, rate, record, section_payload, verdict, write_payload
+
+
+def _history(rates, name="packed_scaling", passed_series=()):
+    """One run per rate (oldest first), same measurement key throughout."""
+    runs = []
+    for i, r in enumerate(rates):
+        ms = [nm(updates_per_sec=r, name=name)]
+        runs.append(record(f"run-{i}", ms, ts=f"2026-07-{i + 1:02d}"))
+    for i, p in enumerate(passed_series):
+        runs.append(
+            record(
+                f"verdict-run-{i}",
+                [nm(name="verdict", params={}, passed=p)],
+                ts=f"2026-08-{i + 1:02d}",
+            )
+        )
+    return runs
+
+
+def _fresh(rate_value=None, name="packed_scaling", passed=None):
+    ms = []
+    if rate_value is not None:
+        ms.append(nm(updates_per_sec=rate_value, name=name))
+    if passed is not None:
+        ms.append(nm(name="verdict", params={}, passed=passed))
+    return record("fresh", ms, ts="2026-08-09")
+
+
+# ------------------------------------------------------------ rate trending
+def test_noisy_but_flat_trend_passes():
+    # +/-8% noise around 1e6: each sample is within warn of the median
+    history = _history([1.00e6, 0.94e6, 1.06e6, 0.97e6, 1.03e6])
+    result = gate_run(_fresh(0.95e6), history)
+    assert result.passed
+    assert result.warned == []
+    assert result.compared == 1
+    assert result.findings[0].tag == "ok"
+
+
+def test_step_regression_fails():
+    history = _history([1.0e6, 1.02e6, 0.98e6, 1.01e6, 0.99e6])
+    result = gate_run(_fresh(0.6e6), history)  # -40% vs trend
+    assert not result.passed
+    assert result.failed[0].label.startswith("scaling/packed_scaling@d1")
+
+
+def test_single_outlier_run_absorbed_by_median():
+    """One catastrophically slow CI run lands in the history; the next good
+    run must NOT be judged against it (the legacy single-baseline gate
+    would have seen +100% then -50% whiplash)."""
+    history = _history([1.0e6, 1.01e6, 0.99e6, 1.02e6, 0.5e6])  # last = outlier
+    result = gate_run(_fresh(1.0e6), history)
+    assert result.passed and result.warned == []
+    # and the converse: the outlier alone doesn't mask a real regression
+    result2 = gate_run(_fresh(0.6e6), history)
+    assert not result2.passed
+
+
+def test_warn_band_between_thresholds():
+    history = _history([1.0e6] * 5)
+    result = gate_run(_fresh(0.85e6), history)  # -15%: warn, not fail
+    assert result.passed
+    assert len(result.warned) == 1
+    assert result.warned[0].tag == "WARN"
+
+
+def test_window_limits_how_far_back_the_trend_looks():
+    # ancient fast runs beyond the window must not drag the trend up
+    history = _history([2.0e6] * 10 + [1.0e6] * 5)
+    result = gate_run(_fresh(0.95e6), history, window=5)
+    assert result.passed and result.warned == []
+    # with a huge window the old rates dominate the median and it trips
+    result2 = gate_run(_fresh(0.95e6), history, window=15)
+    assert not result2.passed
+
+
+# --------------------------------------------------------------- verdicts
+def test_verdict_true_to_false_trips():
+    history = _history([], passed_series=[True, True, True])
+    result = gate_run(_fresh(passed=False), history)
+    assert not result.passed
+    assert "verdict regressed true -> false" in result.failed[0].detail
+
+
+def test_verdict_false_history_does_not_trip():
+    # a verdict that was already failing is a known issue, not a regression
+    history = _history([], passed_series=[False, False, True])
+    result = gate_run(_fresh(passed=False), history)
+    assert result.passed
+
+
+# ----------------------------------------------------- empty / new history
+def test_empty_history_is_baseline_established():
+    result = gate_run(_fresh(1.0e6), [])
+    assert result.baseline_established
+    assert result.passed
+    assert result.compared == 0
+
+
+def test_new_key_is_informational_not_blocking():
+    history = _history([1.0e6] * 3)
+    fresh = record(
+        "fresh",
+        [
+            nm(updates_per_sec=1.0e6),  # known key
+            nm(name="brand_new_bench", updates_per_sec=5.0),  # no history
+        ],
+        ts="2026-08-09",
+    )
+    result = gate_run(fresh, history)
+    assert result.passed
+    assert result.new == 1
+    assert result.compared == 1
+
+
+# ------------------------------------------------------------------- CLI
+def test_cli_history_mode(tmp_path, capsys):
+    from repro.bench.history import append_run
+
+    hist = tmp_path / "perf_history.jsonl"
+    for r in _history([1.0e6] * 5):
+        append_run(r, str(hist))
+    fresh_dir = tmp_path / "fresh"
+    write_payload(
+        fresh_dir,
+        section_payload(
+            "scaling", [rate("packed_scaling", 0.5e6, k_per_device=8)]
+        ),
+    )
+    rc = gate_main(["--fresh", str(fresh_dir), "--history", str(hist)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "gate,history,5 run(s)" in out
+    assert "gate,FAIL" in out
+    assert "gate,verdict,FAIL" in out
+
+
+def test_cli_missing_history_file_is_baseline_established(tmp_path, capsys):
+    fresh_dir = tmp_path / "fresh"
+    write_payload(
+        fresh_dir,
+        section_payload(
+            "scaling", [rate("packed_scaling", 1.0e6, k_per_device=8)]
+        ),
+    )
+    rc = gate_main(
+        ["--fresh", str(fresh_dir), "--history", str(tmp_path / "none.jsonl")]
+    )
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "baseline-established" in out
+    assert "gate,verdict,PASS" in out
+
+
+def test_cli_verdict_regression_via_history(tmp_path, capsys):
+    from repro.bench.history import append_run
+
+    hist = tmp_path / "perf_history.jsonl"
+    for i in range(3):
+        append_run(
+            record(
+                f"run-{i}",
+                [nm(name="feed_efficiency", params={"floor": 0.5}, passed=True)],
+                ts=f"2026-08-0{i + 1}",
+            ),
+            str(hist),
+        )
+    fresh_dir = tmp_path / "fresh"
+    write_payload(
+        fresh_dir,
+        section_payload(
+            "scaling", [verdict("feed_efficiency", False, floor=0.5)]
+        ),
+    )
+    rc = gate_main(["--fresh", str(fresh_dir), "--history", str(hist)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "verdict regressed" in out

@@ -1,0 +1,138 @@
+"""TelemetrySnapshot unit tests: the mapping-protocol shim must behave
+exactly like the ad-hoc dicts it replaced, and the typed consumers
+(serve_counters / to_json) must serialize cleanly."""
+import numpy as np
+import pytest
+
+from repro.core.telemetry import TelemetrySnapshot
+
+
+def _serve_snapshot(**over):
+    kw = dict(
+        engine="packed",
+        n_instances=8,
+        records_in=100,
+        records_fed=90,
+        batches_fed=10,
+        records_dropped=10,
+        routing_dropped=0,
+        blocked_events=2,
+        queue_depth=4,
+        pending=0,
+        malformed=0,
+        source_records=100,
+        wall_s=1.5,
+        ingest_rate=60.0,
+        checkpoints=[{"step": 10, "cursor": 90}],
+        drained=True,
+    )
+    kw.update(over)
+    return TelemetrySnapshot(**kw)
+
+
+# ---------------------------------------------------------- mapping shim
+def test_getitem_and_contains_over_set_fields():
+    tel = _serve_snapshot()
+    assert tel["records_in"] == 100
+    assert tel["engine"] == "packed"
+    assert "records_fed" in tel
+    assert "nnz_total" not in tel  # None field == absent key, like the old dict
+    with pytest.raises(KeyError):
+        tel["nnz_total"]
+
+
+def test_false_and_zero_values_are_present():
+    # drained=False / counters=0 must exist as keys (only None means absent)
+    tel = _serve_snapshot(drained=False, blocked_events=0)
+    assert tel["drained"] is False
+    assert tel["blocked_events"] == 0
+    assert "drained" in tel
+
+
+def test_dict_conversion_and_iteration():
+    tel = _serve_snapshot()
+    d = dict(tel)
+    assert d["records_in"] == 100
+    assert set(iter(tel)) == set(tel.keys())
+    assert len(tel) == len(d)
+    assert ("records_in", 100) in tel.items()
+    assert 100 in tel.values()
+    assert tel.get("nnz_total") is None
+    assert tel.get("nnz_total", -1) == -1
+
+
+def test_extras_ride_along_as_keys():
+    tel = TelemetrySnapshot(engine="single", extras={"custom_counter": 7})
+    assert tel["custom_counter"] == 7
+    assert "custom_counter" in dict(tel)
+
+
+def test_nested_session_snapshot_indexes_like_the_old_dict():
+    inner = TelemetrySnapshot(engine="packed", nnz_total=1234,
+                              nnz_per_instance=np.array([600, 634]))
+    tel = _serve_snapshot()
+    tel.session = inner
+    # the exact pattern README/examples use: report.telemetry["session"]["nnz_total"]
+    assert tel["session"]["nnz_total"] == 1234
+    assert tel["session"]["nnz_per_instance"].shape == (2,)
+
+
+# -------------------------------------------------------------- consumers
+def test_serve_counters_scalars_only():
+    counters = _serve_snapshot().serve_counters()
+    assert counters == {
+        "records_in": 100,
+        "records_fed": 90,
+        "batches_fed": 10,
+        "records_dropped": 10,
+        "blocked_events": 2,
+        "malformed": 0,
+    }
+    assert all(isinstance(v, int) for v in counters.values())
+
+
+def test_to_json_arrays_and_nesting():
+    inner = TelemetrySnapshot(
+        engine="mesh",
+        nnz_per_instance=np.array([1, 2, 3]),
+        cascades_per_instance=np.array([[0, 1], [1, 0], [0, 0]]),
+        nnz_total=np.int64(6),
+    )
+    tel = _serve_snapshot()
+    tel.session = inner
+    out = tel.to_json()
+    assert out["session"]["nnz_per_instance"] == [1, 2, 3]
+    assert out["session"]["nnz_total"] == 6
+    assert out["checkpoints"] == [{"step": 10, "cursor": 90}]
+    import json
+
+    json.dumps(out)  # fully JSON-serializable
+
+
+# --------------------------------------------------- producers round-trip
+def test_session_telemetry_is_snapshot_single():
+    from repro import d4m
+
+    sess = d4m.D4MStream(
+        d4m.StreamConfig(cuts=(64,), top_capacity=512, batch_size=32)
+    )
+    tel = sess.telemetry()
+    assert isinstance(tel, TelemetrySnapshot)
+    assert tel["engine"] == sess.kind
+    assert tel["nnz_total"] == 0
+    assert "nnz_per_layer" in tel and "cascades" in tel
+
+
+def test_session_telemetry_is_snapshot_packed():
+    from repro import d4m
+
+    sess = d4m.D4MStream(
+        d4m.StreamConfig(
+            cuts=(64,), top_capacity=512, batch_size=32, instances_per_device=4
+        )
+    )
+    tel = sess.telemetry()
+    assert isinstance(tel, TelemetrySnapshot)
+    assert tel["n_instances"] == 4
+    assert np.asarray(tel["nnz_per_instance"]).shape == (4,)
+    assert "overflowed_per_instance" in tel

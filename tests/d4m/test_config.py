@@ -96,3 +96,43 @@ def test_semiring_object_accepted():
         cuts=(64,), top_capacity=512, batch_size=32, semiring=d4m.MAX_PLUS
     )
     assert cfg.sr is d4m.MAX_PLUS
+
+
+# ------------------------------------- workload config (configs/d4m_stream)
+def test_workload_to_session_roundtrips_through_planner():
+    """WorkloadConfig.to_session() must hand the planner a valid session
+    config whose plan reflects the workload's own numbers."""
+    from repro.configs.d4m_stream import BENCH, CONFIG, WorkloadConfig
+
+    for wl in (WorkloadConfig(), CONFIG, BENCH):
+        cfg = wl.to_session()
+        assert isinstance(cfg, d4m.StreamConfig)
+        plan = cfg.validate().plan()  # the planner accepts it end to end
+        assert cfg.cuts == wl.cuts
+        assert cfg.batch_size == wl.group_size
+        assert cfg.seed == wl.seed
+        # the planner telescopes: the top layer holds the workload's
+        # configured capacity on top of the layer below's spill
+        assert plan.layer_caps[-1] == wl.top_capacity + plan.layer_caps[-2]
+        assert plan.n_layers == len(wl.cuts) + 1
+        assert plan.total_bytes > 0
+
+
+def test_workload_to_session_overrides_win():
+    from repro.configs.d4m_stream import BENCH
+
+    cfg = BENCH.to_session(instances_per_device=4)
+    assert cfg.instances_per_device == 4
+    assert cfg.resolved_engine() == "packed"
+    assert cfg.plan().n_instances == 4
+
+
+def test_workload_streamconfig_alias_warns():
+    import importlib
+
+    mod = importlib.import_module("repro.configs.d4m_stream")
+    with pytest.warns(DeprecationWarning, match="WorkloadConfig"):
+        alias = mod.StreamConfig
+    assert alias is mod.WorkloadConfig
+    with pytest.raises(AttributeError):
+        mod.no_such_attribute
