@@ -36,6 +36,7 @@ import numpy as np
 
 from benchmarks.reporting import BenchmarkReport
 from repro import d4m, serve
+from repro.core.telemetry import TelemetrySnapshot
 
 EFFICIENCY_FLOOR = 0.5  # served must reach this fraction of raw at K=8
 
@@ -146,6 +147,7 @@ def main(
     top = int(batches * batch * 1.25)
     report = BenchmarkReport("serve")
     efficiency = {}
+    served_tels = []
     for k in k_values:
         flat, routed = _workload(k, batches, batch, scale)
         params = {
@@ -169,6 +171,7 @@ def main(
             f"wall_s={served_wall:.3f},efficiency={efficiency[k]:.2f},"
             f"blocked={tel.blocked_events}", flush=True,
         )
+        served_tels.append(tel)
         report.add(
             "served_rate", params=params,
             updates_per_sec=served_rate, wall_s=served_wall,
@@ -183,6 +186,14 @@ def main(
         )
         report.add("socket_rate", params=params,
                    updates_per_sec=sock_rate, wall_s=sock_wall)
+
+    # cross-leg totals via the typed merge (was: ad-hoc per-key dict sums)
+    totals = TelemetrySnapshot.merge(served_tels)
+    report.add(
+        "served_totals",
+        params={"k_values": [int(k) for k in k_values]},
+        **totals.serve_counters(),
+    )
 
     gate_k = max(k_values)
     passed = efficiency[gate_k] >= EFFICIENCY_FLOOR

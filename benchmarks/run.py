@@ -21,6 +21,11 @@ legs) and executes every leg, writing ``BENCH_<section>.json`` per section
                     rate vs raw-engine rate at K ∈ {1, 8}, with the
                     feed_efficiency (>= 50% at K=8) verdict + a loopback
                     TCP socket leg
+  fleet           — multi-process scale-out (repro.fleet): aggregate served
+                    rate vs worker count (hosts × K sweep over subprocess
+                    workers behind the two-level hash router), with the
+                    fleet_scaling (>= 0.7 × min(N, cores) × single-worker
+                    rate) verdict and record-conservation checks
 
 The legacy flags (``--section hier``, ``--sections hier,scaling``,
 ``--smoke``, ``--full``) still work as a deprecation shim: they synthesize
@@ -69,10 +74,9 @@ def build_spec(args: argparse.Namespace) -> ExperimentSpec:
             "use --experiment <config.json> (see benchmarks/experiments/)",
             file=sys.stderr,
         )
-    # stable leg order: the historical dispatch order, not the set's
+    # stable leg order: the canonical SECTIONS order, not the set's
     chosen = parse_sections(args)
-    ordered = [s for s in ("hier", "kernels", "embed", "scaling",
-                           "cascade_kernel", "serve") if s in chosen]
+    ordered = [s for s in SECTIONS if s in chosen]
     return ExperimentSpec.from_legacy(
         ordered, smoke=args.smoke, full=args.full, json_dir=args.json_dir
     )

@@ -40,7 +40,9 @@ import os
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 #: the benchmark sections (authoritative; benchmarks/run.py re-exports)
-SECTIONS = ("hier", "kernels", "embed", "scaling", "cascade_kernel", "serve")
+SECTIONS = (
+    "hier", "kernels", "embed", "scaling", "cascade_kernel", "serve", "fleet",
+)
 
 _SECTION_MODULES = {
     "hier": "benchmarks.bench_hier_update",
@@ -49,6 +51,7 @@ _SECTION_MODULES = {
     "scaling": "benchmarks.bench_scaling",
     "cascade_kernel": "benchmarks.bench_cascade_kernel",
     "serve": "benchmarks.bench_serve",
+    "fleet": "benchmarks.bench_fleet",
 }
 
 
@@ -233,7 +236,7 @@ class ExperimentSpec:
                 if smoke:
                     params = {"k_values": (1, 8), "groups": 5,
                               "device_sweep": False}
-            else:  # kernels / embed / cascade_kernel / serve take smoke=
+            else:  # kernels / embed / cascade_kernel / serve / fleet take smoke=
                 params = {"smoke": bool(smoke)}
             legs.append(
                 ExperimentLeg(section=section, params=_freeze_params(params))

@@ -211,16 +211,36 @@ _M1 = np.uint32(0x7FEB352D)  # murmur-style finalizer multipliers; the host
 _M2 = np.uint32(0x846CA68B)  # router (repro.serve.router) imports all four
 #                              so its mirror can never silently diverge
 
+#: Width of the routing hash.  The two routing tiers consume disjoint ends
+#: of the same :func:`key_hash32` output: the **instance** tier takes the
+#: hash modulo K (the low-entropy end, here and in the host mirror
+#: ``repro.serve.router.instance_of_numpy``) while the **host** tier of a
+#: multi-process fleet (``repro.fleet.routing.route_host``) takes the top
+#: bits — ``(hash * n_hosts) >> 32``, the exact top ``log2(n_hosts)`` bits
+#: when ``n_hosts`` is a power of two.  One finalizer, two provably
+#: independent prefixes: a retune of the constants above reaches every tier
+#: mechanically.
+KEY_HASH_BITS = 32
 
-def instance_of(rows: jax.Array, cols: jax.Array, n_instances: int) -> jax.Array:
-    """Which of ``n_instances`` owns key ``(row, col)`` — a murmur-style
-    integer finalizer so R-MAT power-law hot rows still spread evenly."""
+
+def key_hash32(rows: jax.Array, cols: jax.Array) -> jax.Array:
+    """The finalized 32-bit key hash every routing tier consumes — a
+    murmur-style integer finalizer over ``(row, col)`` so R-MAT power-law
+    hot rows still spread evenly.  Returns uint32."""
     x = rows.astype(jnp.uint32) * _H1 + cols.astype(jnp.uint32) * _H2
     x = x ^ (x >> 16)
     x = x * _M1
     x = x ^ (x >> 15)
     x = x * _M2
     x = x ^ (x >> 16)
+    return x
+
+
+def instance_of(rows: jax.Array, cols: jax.Array, n_instances: int) -> jax.Array:
+    """Which of ``n_instances`` owns key ``(row, col)``: the low end of
+    :func:`key_hash32` (modulo) — see :data:`KEY_HASH_BITS` for how this
+    composes with the fleet's host tier."""
+    x = key_hash32(rows, cols)
     return (x % np.uint32(n_instances)).astype(jnp.int32)
 
 

@@ -27,6 +27,31 @@ from typing import Any, Dict, Iterator, List, Optional
 
 import numpy as np
 
+#: Version of the counter schema.  Bumped when a counter changes meaning
+#: (not when a new optional field appears); :meth:`TelemetrySnapshot.merge`
+#: refuses to sum snapshots across versions, so a fleet of mixed-version
+#: workers fails loudly instead of producing silently-wrong aggregates.
+TELEMETRY_SCHEMA_VERSION = 1
+
+#: Counter fields :meth:`TelemetrySnapshot.merge` sums across snapshots.
+#: Everything here is an additive count: totals over a fleet are the sum
+#: of the per-worker values.
+_MERGE_SUM_FIELDS = (
+    "nnz_total",
+    "state_bytes",
+    "records_in",
+    "records_fed",
+    "batches_fed",
+    "records_dropped",
+    "routing_dropped",
+    "blocked_events",
+    "queue_depth",
+    "pending",
+    "malformed",
+    "source_records",
+    "n_instances",
+)
+
 
 def _jsonable(value: Any) -> Any:
     if isinstance(value, TelemetrySnapshot):
@@ -63,6 +88,9 @@ class TelemetrySnapshot:
     * ``extras`` — escape hatch for producer-specific values.
     """
 
+    # counter-schema version (see TELEMETRY_SCHEMA_VERSION); merge() refuses
+    # to sum across versions
+    schema_version: int = TELEMETRY_SCHEMA_VERSION
     # identity
     engine: Optional[str] = None
     n_instances: Optional[int] = None
@@ -134,6 +162,53 @@ class TelemetrySnapshot:
 
     def get(self, key: str, default: Any = None) -> Any:
         return self._set_fields().get(key, default)
+
+    # -- aggregation ---------------------------------------------------------
+    @classmethod
+    def merge(cls, snapshots) -> "TelemetrySnapshot":
+        """Sum counter fields across ``snapshots`` into one fleet-wide view.
+
+        Additive counters (:data:`_MERGE_SUM_FIELDS`) are summed over the
+        snapshots that set them; ``wall_s`` is the max (workers run
+        concurrently), ``ingest_rate`` is recomputed as total fed over that
+        wall, ``drained`` is the conjunction and ``overflowed`` the
+        disjunction.  ``engine`` survives only if uniform.  Non-additive
+        per-worker detail (checkpoints, per-instance arrays, extras) is
+        deliberately not merged — read it from the individual snapshots.
+
+        Raises ``ValueError`` on an empty iterable or on mixed
+        ``schema_version`` values: a fleet of mixed-version workers must
+        fail loudly, not produce silently-wrong sums.
+        """
+        snaps = list(snapshots)
+        if not snaps:
+            raise ValueError("merge() needs at least one snapshot")
+        versions = {int(s.schema_version) for s in snaps}
+        if len(versions) != 1:
+            raise ValueError(
+                f"cannot merge snapshots with mixed schema_version "
+                f"{sorted(versions)}; counters may not be comparable"
+            )
+        out = cls(schema_version=versions.pop())
+        engines = {s.engine for s in snaps if s.engine is not None}
+        if len(engines) == 1:
+            out.engine = engines.pop()
+        for name in _MERGE_SUM_FIELDS:
+            vals = [getattr(s, name) for s in snaps if getattr(s, name) is not None]
+            if vals:
+                setattr(out, name, sum(int(v) for v in vals))
+        walls = [s.wall_s for s in snaps if s.wall_s is not None]
+        if walls:
+            out.wall_s = float(max(walls))
+            if out.records_fed is not None and out.wall_s > 0:
+                out.ingest_rate = out.records_fed / out.wall_s
+        drained = [s.drained for s in snaps if s.drained is not None]
+        if drained:
+            out.drained = all(drained)
+        overflowed = [s.overflowed for s in snaps if s.overflowed is not None]
+        if overflowed:
+            out.overflowed = any(overflowed)
+        return out
 
     # -- consumers -----------------------------------------------------------
     def serve_counters(self) -> Dict[str, int]:

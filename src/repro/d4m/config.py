@@ -108,6 +108,19 @@ class ServeConfig:
             )
         return self
 
+    # -- wire form (fleet worker handoff) ------------------------------------
+    def to_dict(self) -> dict:
+        """JSON-ready dict; inverse of :meth:`from_dict`."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServeConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown ServeConfig keys {sorted(unknown)}")
+        return cls(**d).validate()
+
 
 @dataclasses.dataclass(frozen=True)
 class StreamConfig:
@@ -216,6 +229,42 @@ class StreamConfig:
         self.sr  # raises KeyError on an unknown semiring name
         return self
 
+    # -- wire form (fleet worker handoff) ------------------------------------
+    def to_dict(self) -> dict:
+        """JSON-ready dict; inverse of :meth:`from_dict`.
+
+        The fleet controller plans one config and ships it to worker
+        subprocesses over the control channel, so everything here must
+        survive a JSON round trip: the semiring is serialized by registry
+        name, the dtype by its canonical string, and tuples become lists.
+        """
+        out = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if f.name == "semiring":
+                v = v.name if isinstance(v, Semiring) else v
+            elif f.name == "dtype":
+                v = str(jnp.dtype(v))
+            elif f.name == "serve" and v is not None:
+                v = v.to_dict()
+            elif isinstance(v, tuple):
+                v = list(v)
+            out[f.name] = v
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "StreamConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown StreamConfig keys {sorted(unknown)}")
+        kw = dict(d)
+        if kw.get("cuts") is not None:
+            kw["cuts"] = tuple(int(c) for c in kw["cuts"])
+        if kw.get("serve") is not None:
+            kw["serve"] = ServeConfig.from_dict(kw["serve"])
+        return cls(**kw).validate()
+
     def _engine_fits(self, engine: str) -> bool:
         """Whether ``engine`` is structurally valid for this K/D shape."""
         d = self.resolved_devices()
@@ -259,21 +308,32 @@ class StreamConfig:
         return "single"
 
     # -- capacity planning ---------------------------------------------------
-    def plan(self) -> "CapacityPlan":
+    def plan(self, hosts: int = 1) -> "CapacityPlan":
         """Telescope the layer capacities and report the memory footprint.
 
         Mirrors :func:`repro.core.hierarchical.init` exactly (cap_1 = c_1 +
         batch, cap_i = c_i + cap_{i-1}, cap_N = top + cap_{N-1}) so the plan
         is the authoritative preview of what the session will allocate.
+
+        ``hosts`` widens the plan to a fleet of that many worker processes,
+        each running this config (the paper's shape: 34,000 instances are
+        1,100 nodes × ~31 instances/node): ``n_instances``, ``total_bytes``
+        and the default ``snapshot_cap`` all scale by ``hosts``, since
+        two-level hash routing keeps per-host key sets disjoint.
+        ``hosts=1`` is exactly the single-process plan.
         """
         self.validate()
+        if hosts < 1:
+            raise ValueError(f"hosts must be >= 1, got {hosts}")
         cuts = self.resolved_cuts()
         caps = list(
             telescoped_caps(cuts, self.top_capacity, self.batch_size)
         )
         itemsize = self.jnp_dtype.itemsize
         bytes_per_layer = tuple(cap * (4 + 4 + itemsize) for cap in caps)
-        n_instances = self.instances_per_device * self.resolved_devices()
+        n_instances = (
+            self.instances_per_device * self.resolved_devices() * int(hosts)
+        )
         per_instance = sum(bytes_per_layer)
         # default global-snapshot bound: every instance can hold up to its
         # full layer-cap sum of distinct keys, and hash routing makes the
@@ -296,6 +356,7 @@ class StreamConfig:
             batch_size=int(self.batch_size),
             max_fanout=int(self.max_fanout),
             dtype_itemsize=itemsize,
+            hosts=int(hosts),
         )
 
 
@@ -313,6 +374,7 @@ class CapacityPlan:
     batch_size: int
     max_fanout: int
     dtype_itemsize: int
+    hosts: int = 1
 
     @property
     def n_layers(self) -> int:
@@ -320,9 +382,10 @@ class CapacityPlan:
 
     def describe(self) -> str:
         """Human-readable capacity/memory table (the Fig. 3 trade-off)."""
+        fleet = f" on {self.hosts} host(s)" if self.hosts > 1 else ""
         lines = [
             f"D4M capacity plan: {self.n_layers} layers, "
-            f"{self.n_instances} instance(s), batch {self.batch_size}",
+            f"{self.n_instances} instance(s){fleet}, batch {self.batch_size}",
         ]
         for i, cap in enumerate(self.layer_caps):
             cut = self.cuts[i] if i < len(self.cuts) else None

@@ -401,6 +401,18 @@ class D4MStream:
             dtype=self.dtype,
         )
 
+    @classmethod
+    def from_dict(cls, config: Dict[str, Any], **kwargs) -> "D4MStream":
+        """Build a session from :meth:`StreamConfig.to_dict` wire form.
+
+        The fleet controller plans one config, ships it to each worker
+        subprocess as JSON over the control channel, and the worker rebuilds
+        an identical session here — so every host in the fleet is provably
+        running the same validated plan.  ``kwargs`` pass through to the
+        constructor (``checkpoint_dir=``, ...).
+        """
+        return cls(StreamConfig.from_dict(config), **kwargs)
+
     def reset(self) -> "D4MStream":
         """Fresh empty state (same compiled update functions)."""
         self.state = self._init_state()

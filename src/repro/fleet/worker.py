@@ -1,0 +1,239 @@
+"""Fleet worker entry point: ``python -m repro.fleet.worker``.
+
+One worker is one process running the existing ``D4MStream.serve()`` stack
+unchanged over its shard of the stream.  Lifecycle, driven entirely by the
+controller over a newline-delimited-JSON control channel (one TCP
+connection, worker-initiated so only the controller needs a known port):
+
+1. connect to ``--controller`` and send ``attach``;
+2. receive the ``plan`` message: the full :class:`~repro.d4m.StreamConfig`
+   wire form (``StreamConfig.to_dict``), the serve knobs, this
+   incarnation's checkpoint directory, and — on a restart — the exact
+   ``(dir, step, cursor)`` of the last checkpoint the controller saw
+   acknowledged as durable;
+3. build the session (``D4MStream.from_dict``), restore it if asked, bind
+   a :class:`~repro.serve.TCPSource` on an ephemeral port, and send
+   ``hello`` with the data port and the restored cursor — the controller
+   replays its journal from exactly that record onward;
+4. serve until the controller closes the data connection (natural drain:
+   the source ends when its one producer disconnects), sending periodic
+   ``telemetry`` messages and a ``checkpoint`` notice for every checkpoint
+   that is *durably on disk* (manifest published by the atomic rename —
+   never the merely-scheduled async save, so the controller's journal
+   trimming can never outrun what a restart could actually recover);
+5. on drain: final checkpoint (the serve loop's own ``final=True`` path),
+   snapshot to an ``.npz`` next to the checkpoint dir, send ``report``,
+   and exit 0.
+
+Checkpoint cursors on the control channel are *global* (records of this
+worker's shard folded into the state since the fleet started): the plan's
+``cursor_base`` — nonzero after a restart — is added to the serve loop's
+incarnation-local cursor before reporting.  Each incarnation saves into a
+fresh generation directory, so step numbers never collide across restarts.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import sys
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+
+def _send(sock: socket.socket, msg: Dict[str, Any], lock: threading.Lock) -> None:
+    data = (json.dumps(msg) + "\n").encode("utf-8")
+    with lock:
+        sock.sendall(data)
+
+
+def _latest_durable_checkpoint(ckpt_dir: str) -> Optional[Dict[str, Any]]:
+    """The newest published checkpoint's ``(step, extra)``, or ``None``.
+
+    Reads only what the atomic ``os.replace`` made visible; a checkpoint
+    mid-write lives in ``tmp-*`` and is invisible here by construction.
+    """
+    try:
+        from repro.checkpoint.manager import CheckpointManager
+
+        mgr = CheckpointManager(ckpt_dir)
+        step = mgr.latest_step()
+        if step is None:
+            return None
+        path = os.path.join(ckpt_dir, f"ckpt-{step:09d}", "manifest.json")
+        with open(path) as f:
+            manifest = json.load(f)
+        return {"step": step, "extra": manifest.get("extra", {})}
+    except (OSError, ValueError, json.JSONDecodeError):
+        return None  # racing a publish/gc; retry next poll
+
+
+def _restore_session(sess, restore_dir: str, step: Optional[int]) -> Dict[str, Any]:
+    """Restore ``sess`` from a *different* directory than it checkpoints to
+    (each incarnation saves into its own generation dir).  Reuses
+    ``D4MStream.restore`` — and with it the owned-copy aliasing rules the
+    replay parity tests pin down — by temporarily pointing the session at
+    the restore dir."""
+    save_dir = sess._ckpt_dir
+    sess._ckpt_dir, sess._mgr = restore_dir, None
+    try:
+        return sess.restore(step=step)
+    finally:
+        sess._ckpt_dir, sess._mgr = save_dir, None
+
+
+def run_worker(worker_id: int, controller: str) -> int:
+    host, _, port = controller.rpartition(":")
+    ctrl = socket.create_connection((host or "127.0.0.1", int(port)), timeout=30)
+    ctrl_lock = threading.Lock()
+    reader = ctrl.makefile("r", encoding="utf-8")
+    _send(ctrl, {"type": "attach", "worker": worker_id, "pid": os.getpid()},
+          ctrl_lock)
+    line = reader.readline()
+    if not line:
+        return 2
+    plan = json.loads(line)
+    if plan.get("type") != "plan":
+        raise RuntimeError(f"expected plan, got {plan.get('type')!r}")
+
+    # heavy imports after the handshake so a config error surfaces fast
+    from repro import serve
+    from repro.d4m.config import ServeConfig
+    from repro.d4m.session import D4MStream
+    from repro.serve.server import D4MServer
+
+    sess = D4MStream.from_dict(
+        plan["config"], checkpoint_dir=plan.get("checkpoint_dir")
+    )
+    cursor_base = 0
+    restore = plan.get("restore")
+    if restore:
+        extra = _restore_session(sess, restore["dir"], restore.get("step"))
+        cursor_base = int(extra.get("cursor", 0))
+        if restore.get("cursor") is not None and cursor_base != int(
+            restore["cursor"]
+        ):
+            raise RuntimeError(
+                f"restored cursor {cursor_base} != controller's acked cursor "
+                f"{restore['cursor']}: the journal replay would be misaligned"
+            )
+
+    src = serve.TCPSource(
+        port=0, encoding=plan.get("encoding", "binary"), linger=False
+    ).start()
+    serve_cfg = ServeConfig.from_dict(plan.get("serve") or {})
+    server = D4MServer(sess, src, serve_cfg)
+
+    stop_requested = threading.Event()
+
+    def control_reader() -> None:
+        # the controller's only inbound messages are stop/abort; EOF means
+        # the controller died — abort, don't serve a headless stream
+        try:
+            for raw in reader:
+                msg = json.loads(raw)
+                if msg.get("type") == "stop":
+                    stop_requested.set()
+                    server.stop(drain=bool(msg.get("drain", True)))
+        except (OSError, ValueError):
+            pass
+        if not server._done.is_set():
+            stop_requested.set()
+            try:
+                server.stop(drain=False)
+            except Exception:
+                pass
+
+    threading.Thread(target=control_reader, daemon=True,
+                     name="fleet-ctrl-reader").start()
+
+    server.start()
+    _send(ctrl, {
+        "type": "hello", "worker": worker_id, "data_port": src.port,
+        "cursor": cursor_base,
+    }, ctrl_lock)
+
+    interval = float(plan.get("report_interval_s", 0.5))
+    ckpt_dir = plan.get("checkpoint_dir")
+    last_ckpt_step = -1
+    try:
+        while not server._done.wait(timeout=interval):
+            _send(ctrl, {
+                "type": "telemetry", "worker": worker_id,
+                "telemetry": server.telemetry().to_json(),
+            }, ctrl_lock)
+            if ckpt_dir is not None:
+                durable = _latest_durable_checkpoint(ckpt_dir)
+                if durable is not None and durable["step"] > last_ckpt_step:
+                    last_ckpt_step = durable["step"]
+                    _send(ctrl, {
+                        "type": "checkpoint", "worker": worker_id,
+                        "step": durable["step"], "dir": ckpt_dir,
+                        "cursor": cursor_base
+                        + int(durable["extra"].get("cursor", 0)),
+                    }, ctrl_lock)
+        server.join()
+        report = server.report()
+        if ckpt_dir is not None:  # the final checkpoint is durable post-join
+            durable = _latest_durable_checkpoint(ckpt_dir)
+            if durable is not None and durable["step"] > last_ckpt_step:
+                _send(ctrl, {
+                    "type": "checkpoint", "worker": worker_id,
+                    "step": durable["step"], "dir": ckpt_dir,
+                    "cursor": cursor_base
+                    + int(durable["extra"].get("cursor", 0)),
+                }, ctrl_lock)
+        snapshot_path = plan.get("snapshot_path")
+        if snapshot_path:
+            snap = sess.snapshot()
+            nnz = int(snap.nnz)
+            tmp = f"{snapshot_path}.tmp-{os.getpid()}.npz"
+            np.savez(
+                tmp,
+                rows=np.asarray(snap.rows[:nnz]),
+                cols=np.asarray(snap.cols[:nnz]),
+                vals=np.asarray(snap.vals[:nnz]),
+                nnz=nnz,
+                overflow=bool(snap.overflow),
+            )
+            os.replace(tmp, snapshot_path)
+        tel = report.telemetry.to_json()
+        _send(ctrl, {
+            "type": "report", "worker": worker_id,
+            "telemetry": tel,
+            "cursor": cursor_base + int(report.records_fed),
+            "snapshot_path": snapshot_path,
+        }, ctrl_lock)
+        return 0
+    except BaseException as e:  # noqa: BLE001 - one report, then die visibly
+        if stop_requested.is_set() and isinstance(e, OSError):
+            return 2
+        try:
+            _send(ctrl, {
+                "type": "error", "worker": worker_id, "error": repr(e),
+            }, ctrl_lock)
+        except OSError:
+            pass
+        raise
+    finally:
+        try:
+            ctrl.close()
+        except OSError:
+            pass
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--worker-id", type=int, required=True)
+    ap.add_argument("--controller", required=True,
+                    help="host:port of the controller's control listener")
+    args = ap.parse_args(argv)
+    return run_worker(args.worker_id, args.controller)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

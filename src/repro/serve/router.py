@@ -46,8 +46,11 @@ from repro.core.multistream import _H1, _H2, _M1, _M2
 DRAIN = object()  # end-of-stream sentinel yielded by pop() exactly once
 
 
-def instance_of_numpy(rows: np.ndarray, cols: np.ndarray, n_instances: int) -> np.ndarray:
-    """Host mirror of :func:`repro.core.multistream.instance_of`."""
+def key_hash32_numpy(rows: np.ndarray, cols: np.ndarray) -> np.ndarray:
+    """Host mirror of :func:`repro.core.multistream.key_hash32` — the one
+    finalized uint32 hash both routing tiers consume: the instance tier
+    takes it modulo K (:func:`instance_of_numpy`), the fleet host tier
+    takes its top bits (:func:`repro.fleet.routing.route_host`)."""
     with np.errstate(over="ignore"):
         x = rows.astype(np.uint32) * _H1 + cols.astype(np.uint32) * _H2
         x = x ^ (x >> np.uint32(16))
@@ -55,6 +58,13 @@ def instance_of_numpy(rows: np.ndarray, cols: np.ndarray, n_instances: int) -> n
         x = x ^ (x >> np.uint32(15))
         x = x * _M2
         x = x ^ (x >> np.uint32(16))
+        return x
+
+
+def instance_of_numpy(rows: np.ndarray, cols: np.ndarray, n_instances: int) -> np.ndarray:
+    """Host mirror of :func:`repro.core.multistream.instance_of`."""
+    with np.errstate(over="ignore"):
+        x = key_hash32_numpy(rows, cols)
         return (x % np.uint32(n_instances)).astype(np.int32)
 
 

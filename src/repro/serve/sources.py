@@ -344,6 +344,17 @@ class RMATSource(Source):
     ``pregenerate=True`` materializes every chunk on the host up front so a
     serving benchmark measures the feed loop, not the generator;
     ``throttle_s`` sleeps between chunks to emulate a paced producer.
+
+    **Partitioned generation** for fleets: ``(part, num_parts)`` makes this
+    source yield only every ``num_parts``-th chunk of the *same* logical
+    ``total_records`` stream, starting at chunk ``part`` — so N workers
+    constructed with identical ``(total_records, chunk_records, scale,
+    seed)`` and ``part = 0..N-1`` draw disjoint deterministic slices whose
+    union is exactly the single-source stream, bit for bit.  The key chain
+    advances per *global* chunk (skipped chunks still split the key), which
+    is what keeps ``num_parts=1`` identical to the historical stream and
+    kills the duplicate-traffic footgun of two sources sharing default
+    seeds.
     """
 
     def __init__(
@@ -354,6 +365,8 @@ class RMATSource(Source):
         seed: int = 0,
         pregenerate: bool = False,
         throttle_s: float = 0.0,
+        part: int = 0,
+        num_parts: int = 1,
     ):
         super().__init__()
         if total_records < 1 or chunk_records < 1:
@@ -361,11 +374,18 @@ class RMATSource(Source):
                 f"need positive sizes, got total={total_records} "
                 f"chunk={chunk_records}"
             )
+        if num_parts < 1 or not 0 <= part < num_parts:
+            raise ValueError(
+                f"need 0 <= part < num_parts, got part={part} "
+                f"num_parts={num_parts}"
+            )
         self.total_records = int(total_records)
         self.chunk_records = int(chunk_records)
         self.scale = int(scale)
         self.seed = int(seed)
         self.throttle_s = float(throttle_s)
+        self.part = int(part)
+        self.num_parts = int(num_parts)
         self._pre: Optional[list] = None
         if pregenerate:
             self._pre = list(self._generate())
@@ -377,17 +397,20 @@ class RMATSource(Source):
 
         key = jax.random.PRNGKey(self.seed)
         remaining = self.total_records
+        chunk_index = 0
         while remaining > 0:
             key, sub = jax.random.split(key)
             n = min(self.chunk_records, remaining)
-            # fixed-size generation (jit cache) then host-side trim
-            s, d = rmat.rmat_edges(sub, self.chunk_records, self.scale)
-            yield (
-                np.asarray(s[:n], np.int32),
-                np.asarray(d[:n], np.int32),
-                np.ones((n,), np.float32),
-            )
+            if chunk_index % self.num_parts == self.part:
+                # fixed-size generation (jit cache) then host-side trim
+                s, d = rmat.rmat_edges(sub, self.chunk_records, self.scale)
+                yield (
+                    np.asarray(s[:n], np.int32),
+                    np.asarray(d[:n], np.int32),
+                    np.ones((n,), np.float32),
+                )
             remaining -= n
+            chunk_index += 1
 
     def chunks(self) -> Iterator[Chunk]:
         it = iter(self._pre) if self._pre is not None else self._generate()

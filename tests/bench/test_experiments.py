@@ -21,7 +21,8 @@ def test_sections_tuple_matches_run_py():
     from benchmarks.run import SECTIONS as RUN_SECTIONS
 
     assert RUN_SECTIONS == SECTIONS == (
-        "hier", "kernels", "embed", "scaling", "cascade_kernel", "serve"
+        "hier", "kernels", "embed", "scaling", "cascade_kernel", "serve",
+        "fleet",
     )
 
 

@@ -136,3 +136,74 @@ def test_session_telemetry_is_snapshot_packed():
     assert tel["n_instances"] == 4
     assert np.asarray(tel["nnz_per_instance"]).shape == (4,)
     assert "overflowed_per_instance" in tel
+
+
+# --------------------------------------------------------------- merge()
+def test_merge_sums_counters_across_workers():
+    a = _serve_snapshot(records_in=100, records_fed=90, records_dropped=10,
+                        wall_s=2.0)
+    b = _serve_snapshot(records_in=60, records_fed=60, records_dropped=0,
+                        wall_s=3.0)
+    out = TelemetrySnapshot.merge([a, b])
+    assert out.records_in == 160
+    assert out.records_fed == 150
+    assert out.records_dropped == 10
+    assert out.batches_fed == 20
+    assert out.n_instances == 16  # fleet-wide instance count
+    assert out.engine == "packed"
+    # conservation survives the merge: in == fed + dropped
+    assert out.records_in == out.records_fed + out.records_dropped
+
+
+def test_merge_wall_is_max_and_rate_is_recomputed():
+    a = _serve_snapshot(records_fed=100, wall_s=2.0, ingest_rate=50.0)
+    b = _serve_snapshot(records_fed=300, wall_s=4.0, ingest_rate=75.0)
+    out = TelemetrySnapshot.merge([a, b])
+    # workers overlap in time: fleet wall is the longest leg, and the
+    # aggregate rate is total work over that wall — NOT the rate sum
+    assert out.wall_s == 4.0
+    assert out.ingest_rate == pytest.approx(400 / 4.0)
+
+
+def test_merge_drained_all_overflowed_any():
+    drained = TelemetrySnapshot.merge(
+        [_serve_snapshot(drained=True), _serve_snapshot(drained=True)]
+    )
+    assert drained.drained is True
+    half = TelemetrySnapshot.merge(
+        [_serve_snapshot(drained=True), _serve_snapshot(drained=False)]
+    )
+    assert half.drained is False
+    over = TelemetrySnapshot.merge(
+        [TelemetrySnapshot(overflowed=False), TelemetrySnapshot(overflowed=True)]
+    )
+    assert over.overflowed is True
+
+
+def test_merge_skips_unset_fields_and_mixed_engines():
+    a = TelemetrySnapshot(engine="packed", records_fed=5)
+    b = TelemetrySnapshot(engine="single", records_fed=7)
+    out = TelemetrySnapshot.merge([a, b])
+    assert out.records_fed == 12
+    assert out.engine is None  # mixed engines don't pretend to be one
+    assert out.records_dropped is None  # nobody set it -> stays unset
+
+
+def test_merge_rejects_mixed_schema_versions():
+    a = _serve_snapshot()
+    b = _serve_snapshot()
+    b.schema_version = 2
+    with pytest.raises(ValueError, match="schema_version"):
+        TelemetrySnapshot.merge([a, b])
+
+
+def test_merge_rejects_empty():
+    with pytest.raises(ValueError):
+        TelemetrySnapshot.merge([])
+
+
+def test_merge_single_is_identity_on_counters():
+    a = _serve_snapshot()
+    out = TelemetrySnapshot.merge([a])
+    for k in ("records_in", "records_fed", "records_dropped", "batches_fed"):
+        assert out[k] == a[k]

@@ -1,0 +1,147 @@
+"""Host-tier routing properties: the provable prefix contract.
+
+``route_host`` must consume exactly the *top* bits of the same 32-bit key
+hash whose low end (modulo K) the in-process instance router consumes —
+that disjointness is what makes a fleet's merged snapshot bit-identical to
+single-process ingest, so it is pinned by property tests, not convention.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # container without hypothesis: deterministic replay
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import multistream
+from repro.fleet import host_prefix_bits, route_host, split_by_host
+from repro.serve.router import instance_of_numpy, key_hash32_numpy
+
+
+def _records(seed: int, n: int):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, 1 << 20, n).astype(np.int32)
+    cols = rng.integers(0, 1 << 20, n).astype(np.int32)
+    return rows, cols
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    seed=st.integers(0, 2**16),
+    n=st.integers(1, 512),
+    log_h=st.integers(0, 8),
+)
+def test_route_host_is_hash_top_bits(seed, n, log_h):
+    """Power-of-two H: route_host == key_hash32 >> (32 - log2(H)) — the
+    exact top bits of the hash route_numpy / route_to_instances use."""
+    rows, cols = _records(seed, n)
+    n_hosts = 1 << log_h
+    got = route_host(rows, cols, n_hosts)
+    h = key_hash32_numpy(rows, cols)
+    if log_h == 0:
+        expect = np.zeros(n, np.int32)
+    else:
+        expect = (h >> np.uint32(32 - log_h)).astype(np.int32)
+    np.testing.assert_array_equal(got, expect)
+    assert got.dtype == np.int32
+    assert ((got >= 0) & (got < n_hosts)).all()
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 256))
+def test_host_hash_matches_device_instance_hash(seed, n):
+    """One finalizer end to end: the numpy hash the host tier reads is
+    bit-identical to the jax hash the device instance router reads."""
+    rows, cols = _records(seed, n)
+    host_h = key_hash32_numpy(rows, cols)
+    dev_h = np.asarray(
+        multistream.key_hash32(jnp.asarray(rows), jnp.asarray(cols))
+    ).astype(np.uint32)
+    np.testing.assert_array_equal(host_h, dev_h)
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    seed=st.integers(0, 2**16),
+    n=st.integers(1, 256),
+    n_hosts=st.sampled_from([2, 3, 4, 6, 8]),
+    k=st.sampled_from([1, 2, 8]),
+)
+def test_host_partition_preserves_instance_assignment(seed, n, n_hosts, k):
+    """The two tiers read disjoint ends of one hash: splitting by host and
+    then assigning instances equals assigning instances globally and then
+    splitting — (host, instance) is a well-defined pair per key."""
+    rows, cols = _records(seed, n)
+    vals = np.ones(n, np.float32)
+    global_inst = instance_of_numpy(rows, cols, k)
+    owner = route_host(rows, cols, n_hosts)
+    for h, (r, c, _v) in enumerate(split_by_host(rows, cols, vals, n_hosts)):
+        np.testing.assert_array_equal(
+            instance_of_numpy(r, c, k), global_inst[owner == h]
+        )
+
+
+def test_h1_reproduces_single_process_routing():
+    """A fleet of one host is the single-process system, bit-exactly: every
+    record routes to host 0 and the one slice is the unmodified stream."""
+    rows, cols = _records(7, 1000)
+    vals = np.arange(1000, dtype=np.float32)
+    np.testing.assert_array_equal(
+        route_host(rows, cols, 1), np.zeros(1000, np.int32)
+    )
+    (r, c, v), = split_by_host(rows, cols, vals, 1)
+    np.testing.assert_array_equal(r, rows)
+    np.testing.assert_array_equal(c, cols)
+    np.testing.assert_array_equal(v, vals)
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    seed=st.integers(0, 2**16),
+    n=st.integers(0, 512),
+    n_hosts=st.sampled_from([1, 2, 3, 4, 7, 8]),
+)
+def test_split_by_host_is_stable_partition(seed, n, n_hosts):
+    """Slices are disjoint, exhaustive, owner-correct, and order-stable
+    (each worker sees its shard in arrival order — the replay contract)."""
+    rows, cols = _records(seed, max(n, 1))
+    rows, cols = rows[:n], cols[:n]
+    vals = np.arange(n, dtype=np.float32)  # arrival index as payload
+    parts = split_by_host(rows, cols, vals, n_hosts)
+    assert len(parts) == n_hosts
+    owner = route_host(rows, cols, n_hosts)
+    total = 0
+    for h, (r, c, v) in enumerate(parts):
+        total += r.shape[0]
+        np.testing.assert_array_equal(route_host(r, c, n_hosts),
+                                      np.full(r.shape[0], h, np.int32))
+        # order-stable: the arrival indices in each slice are increasing
+        assert (np.diff(v) > 0).all() if v.shape[0] > 1 else True
+        np.testing.assert_array_equal(r, rows[owner == h])
+    assert total == n
+
+
+def test_host_prefix_bits():
+    assert host_prefix_bits(1) == 0
+    assert host_prefix_bits(2) == 1
+    assert host_prefix_bits(8) == 3
+    assert host_prefix_bits(256) == 8
+    assert host_prefix_bits(3) is None
+    assert host_prefix_bits(6) is None
+
+
+def test_route_host_non_power_of_two_in_range():
+    rows, cols = _records(3, 4096)
+    got = route_host(rows, cols, 3)
+    assert ((got >= 0) & (got < 3)).all()
+    # multiply-shift stays well-spread even without the bit-shift degeneracy
+    counts = np.bincount(got, minlength=3)
+    assert (counts > 0).all()
+
+
+def test_route_host_rejects_bad_host_count():
+    rows, cols = _records(0, 4)
+    with pytest.raises(ValueError):
+        route_host(rows, cols, 0)

@@ -220,12 +220,22 @@ def test_tcp_source_roundtrip(rng, encoding):
 def test_tcp_source_two_producers(rng):
     r, c, v = _triples(rng, 200)
     src = TCPSource(port=0).start()
+    # connect both producers before either sends: on a slow box one could
+    # otherwise connect+send+close before the other ever connects, which
+    # linger=False correctly reads as "all producers done" — a lost-records
+    # race in the *test*, not the source
+    conns = [
+        socket.create_connection(("127.0.0.1", src.port), timeout=10)
+        for _ in range(2)
+    ]
+
+    def _produce(sock, lo, hi):
+        with sock:
+            sock.sendall(wire.encode_text(r[lo:hi], c[lo:hi], v[lo:hi]))
+
     halves = [
-        threading.Thread(
-            target=wire.send_triples,
-            args=("127.0.0.1", src.port, r[lo:hi], c[lo:hi], v[lo:hi]),
-        )
-        for lo, hi in ((0, 100), (100, 200))
+        threading.Thread(target=_produce, args=(conn, lo, hi))
+        for conn, (lo, hi) in zip(conns, ((0, 100), (100, 200)))
     ]
     for t in halves:
         t.start()
@@ -404,6 +414,51 @@ def test_rmat_source_deterministic_and_sized():
     assert (a[0] < 2**10).all() and (a[0] >= 0).all()
     c = _collect(RMATSource(1000, chunk_records=256, scale=10, seed=8))
     assert not np.array_equal(a[0], c[0])
+
+
+def test_rmat_partitioned_slices_reassemble_the_full_stream():
+    """N sources with identical (total, chunk, scale, seed) and
+    part=0..N-1 draw disjoint chunk slices whose interleaved union is the
+    single-source stream, bit for bit (the fleet's disjoint-shard
+    contract)."""
+    full = list(RMATSource(2000, chunk_records=256, scale=10, seed=7).chunks())
+    parts = [
+        list(RMATSource(2000, chunk_records=256, scale=10, seed=7,
+                        part=p, num_parts=3).chunks())
+        for p in range(3)
+    ]
+    assert sum(len(p) for p in parts) == len(full)
+    for j, chunk in enumerate(full):
+        got = parts[j % 3][j // 3]
+        for a, b in zip(got, chunk):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_rmat_default_partition_is_the_historical_stream():
+    a = _collect(RMATSource(1000, chunk_records=256, scale=10, seed=7))
+    b = _collect(RMATSource(1000, chunk_records=256, scale=10, seed=7,
+                            part=0, num_parts=1))
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    np.testing.assert_array_equal(a[2], b[2])
+
+
+def test_rmat_partition_pregenerate_matches_lazy():
+    lazy = _collect(RMATSource(2000, chunk_records=256, scale=10, seed=7,
+                               part=1, num_parts=3))
+    pre = _collect(RMATSource(2000, chunk_records=256, scale=10, seed=7,
+                              part=1, num_parts=3, pregenerate=True))
+    np.testing.assert_array_equal(lazy[0], pre[0])
+    np.testing.assert_array_equal(lazy[2], pre[2])
+
+
+def test_rmat_partition_validates_bounds():
+    with pytest.raises(ValueError):
+        RMATSource(1000, part=3, num_parts=3)
+    with pytest.raises(ValueError):
+        RMATSource(1000, part=-1, num_parts=2)
+    with pytest.raises(ValueError):
+        RMATSource(1000, part=0, num_parts=0)
 
 
 def test_rmat_pregenerate_matches_lazy():
