@@ -17,6 +17,11 @@ Design (works the same on 1 CPU and 1,100 nodes):
   ``jax.device_put`` applies the target sharding.  On this single-host
   container that degenerates to a full save, exercising the same code path.
 * **Retention**: keep the newest ``keep`` checkpoints, best-effort cleanup.
+* **Integrity**: the manifest records the CRC32 and byte length of
+  ``arrays.npz``; ``restore`` verifies them and, with ``fallback=True``
+  (the default when no step is pinned), walks back generation-by-
+  generation past torn/corrupt/unreadable checkpoints to the newest one
+  that verifies — a lying disk costs one checkpoint interval, not the run.
 """
 from __future__ import annotations
 
@@ -26,10 +31,18 @@ import re
 import shutil
 import threading
 import time
-from typing import Any, Dict, Optional, Tuple
+import zlib
+from typing import TYPE_CHECKING, Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.faults import FaultPlan
+
+
+class CheckpointDamaged(RuntimeError):
+    """One specific checkpoint generation failed to verify or load."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -45,12 +58,22 @@ def _treedef_of(tree):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(
+        self,
+        directory: str,
+        keep: int = 3,
+        faults: "Optional[FaultPlan]" = None,
+    ):
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        if faults is None:
+            from repro.faults import FaultPlan as _FP
+
+            faults = _FP.from_env()
+        self._faults = faults
 
     # ------------------------------------------------------------- save
     def save(self, step: int, state, extra: Optional[Dict[str, Any]] = None):
@@ -87,20 +110,56 @@ class CheckpointManager:
             err, self._error = self._error, None
             raise err
 
+    def set_faults(self, faults: "Optional[FaultPlan]") -> None:
+        """Attach (or clear) a fault plan after construction — lets a serve
+        loop share one plan instance with the session's lazily-created
+        manager instead of each building its own from the environment."""
+        self._faults = faults
+
     def _write(self, step: int, host_state, extra: Dict[str, Any]):
         tmp = os.path.join(self.dir, f"tmp-{step}-{os.getpid()}")
         final = os.path.join(self.dir, f"ckpt-{step:09d}")
         os.makedirs(tmp, exist_ok=True)
         flat = _flatten(host_state)
-        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        npz_path = os.path.join(tmp, "arrays.npz")
+        np.savez(npz_path, **flat)
+
+        with open(npz_path, "rb") as f:
+            payload = f.read()
         manifest = {
             "step": step,
             "extra": extra,
             "keys": sorted(flat.keys()),
             "time": time.time(),
+            "arrays_bytes": len(payload),
+            "arrays_crc32": zlib.crc32(payload) & 0xFFFFFFFF,
         }
+
+        # Fault sites damage the payload *after* the manifest integrity
+        # fields were computed over the good bytes — exactly the shape of a
+        # disk that lies between write and publish.  The publish below still
+        # happens, so the damage lands in a *visible* generation.
+        if self._faults is not None:
+            spec = self._faults.fire("checkpoint.torn_write", cursor=step)
+            if spec is not None:
+                keep = int(spec.args.get("keep_bytes", len(payload) // 2))
+                with open(npz_path, "r+b") as f:
+                    f.truncate(max(0, keep))
+            spec = self._faults.fire("checkpoint.corrupt_payload", cursor=step)
+            if spec is not None:
+                off = min(
+                    int(spec.args.get("offset", len(payload) // 2)),
+                    max(0, len(payload) - 1),
+                )
+                with open(npz_path, "r+b") as f:
+                    f.seek(off)
+                    b = f.read(1)
+                    f.seek(off)
+                    f.write(bytes([(b[0] ^ 0xFF) if b else 0xFF]))
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)  # atomic publish
@@ -124,28 +183,98 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(
-        self, state_like, step: Optional[int] = None, shardings=None
-    ) -> Tuple[Any, Dict[str, Any]]:
-        """Restore into the structure of ``state_like``; optionally apply a
-        sharding pytree (elastic restart onto a different mesh re-shards
-        here)."""
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+    def _load_verified(self, step: int, state_like):
+        """Load + integrity-check one generation; raises
+        :class:`CheckpointDamaged` on any failure mode a bad disk can
+        produce (torn payload, flipped bytes, unreadable zip, missing
+        keys, garbled manifest)."""
         path = os.path.join(self.dir, f"ckpt-{step:09d}")
-        with open(os.path.join(path, "manifest.json")) as f:
-            manifest = json.load(f)
-        arrays = np.load(os.path.join(path, "arrays.npz"))
-        leaves_like, treedef = jax.tree_util.tree_flatten_with_path(state_like)
-        leaves = []
-        for kp, like in leaves_like:
-            key = jax.tree_util.keystr(kp)
-            arr = arrays[key]
-            leaves.append(arr.astype(like.dtype) if hasattr(like, "dtype") else arr)
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+            npz_path = os.path.join(path, "arrays.npz")
+            with open(npz_path, "rb") as f:
+                payload = f.read()
+            # pre-CRC manifests (older generations) skip the byte checks
+            want_bytes = manifest.get("arrays_bytes")
+            if want_bytes is not None and len(payload) != want_bytes:
+                raise CheckpointDamaged(
+                    f"ckpt-{step:09d}: arrays.npz is {len(payload)} bytes, "
+                    f"manifest says {want_bytes} (torn write)"
+                )
+            want_crc = manifest.get("arrays_crc32")
+            if want_crc is not None:
+                got = zlib.crc32(payload) & 0xFFFFFFFF
+                if got != want_crc:
+                    raise CheckpointDamaged(
+                        f"ckpt-{step:09d}: arrays.npz crc32 {got:#010x} != "
+                        f"manifest {want_crc:#010x} (corrupt payload)"
+                    )
+            arrays = np.load(npz_path)
+            leaves_like, _ = jax.tree_util.tree_flatten_with_path(state_like)
+            leaves = []
+            for kp, like in leaves_like:
+                key = jax.tree_util.keystr(kp)
+                arr = arrays[key]
+                leaves.append(
+                    arr.astype(like.dtype) if hasattr(like, "dtype") else arr
+                )
+        except CheckpointDamaged:
+            raise
+        except Exception as err:
+            # np.load raises zipfile.BadZipFile / OSError / KeyError /
+            # EOFError depending on where the damage lands — any load
+            # failure of one generation is damage, not a caller bug
+            raise CheckpointDamaged(f"ckpt-{step:09d}: {err!r}") from err
         state = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(state_like), leaves
         )
-        if shardings is not None:
-            state = jax.tree.map(jax.device_put, state, shardings)
-        return state, manifest["extra"] | {"step": manifest["step"]}
+        return state, manifest
+
+    def restore(
+        self,
+        state_like,
+        step: Optional[int] = None,
+        shardings=None,
+        fallback: Optional[bool] = None,
+    ) -> Tuple[Any, Dict[str, Any]]:
+        """Restore into the structure of ``state_like``; optionally apply a
+        sharding pytree (elastic restart onto a different mesh re-shards
+        here).
+
+        ``fallback`` controls damage handling: ``True`` walks back past
+        torn/corrupt generations to the newest one that verifies (raising
+        only when *no* generation loads); ``False`` raises
+        :class:`CheckpointDamaged` on the requested generation.  Default:
+        fall back exactly when no ``step`` was pinned.
+        """
+        if fallback is None:
+            fallback = step is None
+        steps = self.all_steps()
+        if step is not None:
+            candidates = [s for s in steps if s <= step]
+            if step not in steps:
+                raise FileNotFoundError(
+                    f"no checkpoint for step {step} in {self.dir}"
+                )
+        else:
+            candidates = steps
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+
+        last_err: Optional[CheckpointDamaged] = None
+        for s in reversed(candidates):
+            try:
+                state, manifest = self._load_verified(s, state_like)
+            except CheckpointDamaged as err:
+                last_err = err
+                if not fallback:
+                    raise
+                continue
+            if shardings is not None:
+                state = jax.tree.map(jax.device_put, state, shardings)
+            return state, manifest["extra"] | {"step": manifest["step"]}
+        raise CheckpointDamaged(
+            f"all {len(candidates)} checkpoint generation(s) in {self.dir} "
+            f"are damaged; last error: {last_err}"
+        )

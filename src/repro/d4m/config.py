@@ -62,6 +62,11 @@ class ServeConfig:
       timeout and the stale-batch flush cadence.
     * ``drain_timeout_s`` — bound on the graceful drain (flush + feed the
       residue + device sync) at shutdown.
+    * ``faults`` — an optional :class:`repro.faults.FaultPlan` consulted at
+      the compiled injection sites (chaos tests only; ``None`` keeps every
+      site a single ``is not None`` check).  When unset, the serve loop
+      falls back to the ``REPRO_FAULTS`` environment variable so subprocess
+      fleet workers inherit the controller's plan.
     """
 
     max_batch: int | None = None
@@ -71,6 +76,7 @@ class ServeConfig:
     checkpoint_every: int | None = None
     poll_interval_s: float = 0.005
     drain_timeout_s: float = 60.0
+    faults: Any = None  # Optional[repro.faults.FaultPlan]
 
     def validate(self) -> "ServeConfig":
         if self.max_batch is not None and self.max_batch < 1:
@@ -106,12 +112,33 @@ class ServeConfig:
             raise ValueError(
                 f"drain_timeout_s must be positive, got {self.drain_timeout_s}"
             )
+        if self.faults is not None:
+            from repro.faults import FaultPlan
+
+            if not isinstance(self.faults, FaultPlan):
+                raise ValueError(
+                    f"faults must be a repro.faults.FaultPlan or None, "
+                    f"got {type(self.faults).__name__}"
+                )
         return self
 
     # -- wire form (fleet worker handoff) ------------------------------------
     def to_dict(self) -> dict:
-        """JSON-ready dict; inverse of :meth:`from_dict`."""
-        return dataclasses.asdict(self)
+        """JSON-ready dict; inverse of :meth:`from_dict`.
+
+        Built field-by-field (not ``dataclasses.asdict``) because a
+        :class:`~repro.faults.FaultPlan` carries runtime trigger state the
+        recursive copy would choke on — only its spec list travels, so a
+        worker process rebuilding from the wire form starts with fresh
+        per-process counters (the semantics chaos tests rely on).
+        """
+        out = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if f.name == "faults" and v is not None:
+                v = v.to_dict()
+            out[f.name] = v
+        return out
 
     @classmethod
     def from_dict(cls, d: dict) -> "ServeConfig":
@@ -119,6 +146,11 @@ class ServeConfig:
         unknown = set(d) - known
         if unknown:
             raise ValueError(f"unknown ServeConfig keys {sorted(unknown)}")
+        d = dict(d)
+        if d.get("faults") is not None and not hasattr(d["faults"], "fire"):
+            from repro.faults import FaultPlan
+
+            d["faults"] = FaultPlan.from_dict(d["faults"])
         return cls(**d).validate()
 
 

@@ -649,13 +649,19 @@ class D4MStream:
     def wait_checkpoint(self) -> None:
         self._manager().wait()
 
-    def restore(self, step: int | None = None) -> Dict[str, Any]:
+    def restore(
+        self, step: int | None = None, fallback: bool | None = None
+    ) -> Dict[str, Any]:
         """Restore state from the latest (or given) checkpoint; returns the
-        saved ``extra`` metadata (e.g. the stream cursor)."""
+        saved ``extra`` metadata (e.g. the stream cursor).  ``fallback``
+        (default: on when no step is pinned) walks back past torn/corrupt
+        generations to the newest one that verifies — see
+        :meth:`repro.checkpoint.manager.CheckpointManager.restore`."""
         mgr = self._manager()
         mgr.wait()
         like = jax.tree.map(jnp.zeros_like, self.state)
-        state, extra = mgr.restore(like, step=step, shardings=None)
+        state, extra = mgr.restore(like, step=step, shardings=None,
+                                   fallback=fallback)
         # The manager returns host (numpy) leaves.  They must come back as
         # device arrays that OWN their buffers (an explicit copy, never
         # jnp.asarray / a device_put of the manager's array): on the CPU

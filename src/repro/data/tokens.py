@@ -70,9 +70,14 @@ class TokenStream:
         self.step = step
 
 
+_SENTINEL = object()  # producer's last word: "no more batches are coming"
+
+
 class Prefetcher:
     """Double-buffered background prefetch: overlaps host batch synthesis /
-    IO with device compute.  ``close()`` drains the thread."""
+    IO with device compute.  ``close()`` drains the thread and joins it
+    unbounded — a timed join can leak a live thread still holding the
+    stream's file handle on a slow box."""
 
     def __init__(self, stream: TokenStream, depth: int = 2, device_put=None):
         self.stream = stream
@@ -81,32 +86,51 @@ class Prefetcher:
         self._put = device_put or (lambda b: jax.tree.map(jnp.asarray, b))
 
         def work():
-            while not self._stop.is_set():
-                b = next(self.stream)
-                try:
-                    self.q.put(self._put(b), timeout=1.0)
-                except queue.Full:
-                    if self._stop.is_set():
-                        break
-                    # retry until the consumer catches up
+            try:
+                while not self._stop.is_set():
+                    try:
+                        b = next(self.stream)
+                    except StopIteration:
+                        break  # normal end-of-stream, not an error
                     while not self._stop.is_set():
                         try:
-                            self.q.put_nowait(self._put(b))
+                            self.q.put(self._put(b), timeout=0.05)
                             break
                         except queue.Full:
-                            self._stop.wait(0.05)
+                            continue  # retry until consumer catches up/stops
+            finally:
+                # always signal end-of-stream, even on an exception: a
+                # blocked consumer must wake instead of waiting forever.
+                # If the queue is full, evict one batch to make room — the
+                # producer is the only putter by now, so this terminates.
+                while True:
+                    try:
+                        self.q.put_nowait(_SENTINEL)
+                        break
+                    except queue.Full:
+                        try:
+                            self.q.get_nowait()
+                        except queue.Empty:
+                            pass
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
 
     def __next__(self):
-        return self.q.get()
+        item = self.q.get()
+        if item is _SENTINEL:
+            self.q.put(_SENTINEL)  # keep signalling any other consumer
+            raise StopIteration
+        return item
 
     def close(self):
         self._stop.set()
-        try:
-            while True:
-                self.q.get_nowait()
-        except queue.Empty:
-            pass
-        self._thread.join(timeout=2.0)
+        # drain to unblock a producer stuck in put(); the sentinel in the
+        # work loop's finally guarantees the thread exits, so the unbounded
+        # join below cannot hang
+        while self._thread.is_alive():
+            try:
+                self.q.get(timeout=0.05)
+            except queue.Empty:
+                pass
+        self._thread.join()

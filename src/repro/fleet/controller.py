@@ -62,9 +62,17 @@ import numpy as np
 
 from repro.core.telemetry import TelemetrySnapshot
 from repro.d4m.config import ServeConfig, StreamConfig
+from repro.faults import (
+    ENV_VAR,
+    GENERATION_ENV_VAR,
+    WORKER_ENV_VAR,
+    FaultPlan,
+    RetryPolicy,
+)
+from repro.runtime.elastic import Heartbeat
 from repro.serve import wire
 
-from .routing import split_by_host
+from .routing import host_key_range, split_by_host
 
 _TEL_FIELDS = {f.name for f in dataclasses.fields(TelemetrySnapshot)}
 
@@ -154,6 +162,12 @@ class WorkerHandle:
         self.last_ckpt: Optional[Dict[str, Any]] = None  # dir/step/cursor
         self.error: Optional[str] = None
         self.log_path: Optional[str] = None
+        self.quarantined = False  # crash-loop breaker tripped; never revived
+        self.last_revive_error: Optional[str] = None
+        # heartbeat coverage starts at this incarnation's hello: imports +
+        # session build before it can legitimately take far longer than any
+        # useful hang deadline (spawn_timeout_s owns that window instead)
+        self.hb_armed = False
 
     @property
     def delivered(self) -> Optional[int]:
@@ -180,17 +194,26 @@ class FleetReport:
     snapshot_triples: List[Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]]] = dataclasses.field(
         default_factory=list
     )
+    # crash-loop casualties: one entry per quarantined worker slot with its
+    # orphaned key-range and the exact journaled-but-undelivered count
+    quarantined: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    records_quarantined: int = 0  # Σ journaled-but-undelivered, exact
 
     @property
     def conserved(self) -> bool:
         """Both conservation contracts: per-worker serve accounting summed
         (``records_in == records_fed + records_dropped``) and the fleet
-        ledger (every routed record delivered exactly once)."""
+        ledger — every routed record either delivered exactly once or
+        exactly accounted against a quarantined worker, never silently
+        lost."""
         t = self.telemetry
         serve_ok = (t.records_in or 0) == (t.records_fed or 0) + (
             t.records_dropped or 0
         )
-        return serve_ok and self.records_delivered == self.records_in
+        return serve_ok and (
+            self.records_delivered + self.records_quarantined
+            == self.records_in
+        )
 
     def merged_snapshot(self, cap: Optional[int] = None, sr=None):
         """Fold the per-worker snapshots into the fleet-global
@@ -207,6 +230,13 @@ class FleetReport:
 
         import jax.numpy as jnp
 
+        if self.quarantined:
+            raise RuntimeError(
+                f"merged_snapshot unavailable: worker(s) "
+                f"{[q['worker'] for q in self.quarantined]} are quarantined; "
+                f"their shard is exactly accounted in records_quarantined "
+                f"({self.records_quarantined} records)"
+            )
         sr = sr or PLUS_TIMES
         rows, cols, vals = [], [], []
         for triple in self.snapshot_triples:
@@ -251,6 +281,9 @@ class FleetController:
         spawn_timeout_s: float = 120.0,
         env: Optional[Dict[str, str]] = None,
         python: str = sys.executable,
+        faults: Optional[FaultPlan] = None,
+        heartbeat_timeout_s: Optional[float] = None,
+        connect_retry: Optional[RetryPolicy] = None,
     ):
         if n_workers < 1:
             raise ValueError(f"n_workers must be >= 1, got {n_workers}")
@@ -268,6 +301,28 @@ class FleetController:
         self.spawn_timeout_s = float(spawn_timeout_s)
         self.extra_env = dict(env or {})
         self.python = python
+        # Fault plan: consulted at controller sites (journal_disk_full) and
+        # propagated to every worker via the environment, where it drives
+        # the serve/checkpoint sites with only_worker scoping.  Explicit
+        # argument wins; otherwise inherit the environment (so a chaos CI
+        # job can inject without touching call sites).
+        self._faults = faults if faults is not None else FaultPlan.from_env()
+        # Liveness: socket errors catch dead workers; the heartbeat deadline
+        # catches HUNG-but-connected ones (no control-plane message for
+        # longer than the timeout).  The deadline arms per incarnation at
+        # ``hello`` — startup (imports, restore, session build) is covered
+        # by spawn_timeout_s, not the heartbeat, so the timeout can be
+        # sized for the telemetry cadence rather than worst-case cold
+        # compile.  Disabled (None) by default.
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self._hb = (
+            Heartbeat(range(n_workers), timeout_s=float(heartbeat_timeout_s))
+            if heartbeat_timeout_s is not None
+            else None
+        )
+        self.connect_retry = connect_retry or RetryPolicy(
+            max_attempts=8, base_delay_s=0.05, max_delay_s=1.0, deadline_s=30.0
+        )
         self.workers = [WorkerHandle(i) for i in range(self.n_workers)]
         self.records_in = 0
         self._listener: Optional[socket.socket] = None
@@ -362,7 +417,20 @@ class FleetController:
         env["PYTHONPATH"] = src_root + (
             os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
         )
+        if self._faults is not None:
+            # ship the plan to the worker; WORKER_ENV_VAR binds the process
+            # to its slot so only_worker-scoped specs hit one worker.  Each
+            # incarnation rebuilds from specs with fresh counters — "crash
+            # after N batches" means N batches of each incarnation.
+            env[ENV_VAR] = self._faults.to_env()
+            env[WORKER_ENV_VAR] = str(h.worker_id)
+            # only_generation-scoped specs read this: crash generation 0
+            # once, let the revival run clean (vs. unscoped = crash-loop)
+            env[GENERATION_ENV_VAR] = str(h.generation)
         env.update(self.extra_env)
+        h.hb_armed = False  # this incarnation's deadline arms at its hello
+        if self._hb is not None:
+            self._hb.ping(h.worker_id)  # fresh deadline for the new process
         with open(h.log_path, "ab") as log:
             h.proc = subprocess.Popen(
                 [
@@ -384,8 +452,10 @@ class FleetController:
                     f"(exit={h.proc.poll() if h.proc else None}); "
                     f"log: {self._log_tail(h)}"
                 )
-        h.data_sock = socket.create_connection(
-            ("127.0.0.1", h.data_port), timeout=30
+        h.data_sock = self.connect_retry.call(
+            lambda: socket.create_connection(
+                ("127.0.0.1", h.data_port), timeout=30
+            )
         )
         h.data_sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
 
@@ -420,12 +490,17 @@ class FleetController:
                 h.ctrl_conn = conn
                 plan = h.pending_plan
             conn.sendall((json.dumps(plan) + "\n").encode("utf-8"))
+            if self._hb is not None:
+                self._hb.ping(h.worker_id)
             for raw in reader:
                 msg = json.loads(raw)
                 kind = msg.get("type")
+                if self._hb is not None:
+                    self._hb.ping(h.worker_id)
                 if kind == "hello":
                     h.data_port = int(msg["data_port"])
                     h.cursor_base = int(msg["cursor"])
+                    h.hb_armed = True  # serving now; deadline means a hang
                     h.hello_event.set()
                 elif kind == "telemetry":
                     h.telemetry = _tel_from_json(msg["telemetry"])
@@ -458,18 +533,37 @@ class FleetController:
     def push(self, rows, cols, vals) -> None:
         """Route one record chunk across the fleet and send each worker its
         slice (journal-first, so a crash between journal and socket is
-        always recoverable by replay)."""
+        always recoverable by replay).
+
+        ``records_in`` counts per-part *after* the journal append succeeds:
+        a journal failure (disk full) raises before the part is counted, so
+        the ledger never claims acceptance of records the fleet cannot
+        recover.  Parts owned by a quarantined worker are journaled but not
+        sent — they become the report's exact ``records_quarantined``.
+        """
         rows = np.asarray(rows, np.int32).ravel()
         cols = np.asarray(cols, np.int32).ravel()
         vals = np.asarray(vals, np.float32).ravel()
         if rows.shape[0] == 0:
             return
-        self.records_in += int(rows.shape[0])
         parts = split_by_host(rows, cols, vals, self.n_workers)
         for h, (r, c, v) in zip(self.workers, parts):
             if r.shape[0] == 0:
                 continue
+            if self._faults is not None:
+                spec = self._faults.fire(
+                    "controller.journal_disk_full", cursor=h.journal.total
+                )
+                if spec is not None:
+                    raise OSError(
+                        f"journal append failed for worker {h.worker_id} "
+                        f"(injected disk-full); records_in={self.records_in} "
+                        f"counts only accepted records"
+                    )
             h.journal.append(r, c, v)
+            self.records_in += int(r.shape[0])
+            if h.quarantined:
+                continue  # journaled (exactly accounted), never sent
             self._send(h, [(r, c, v)])
 
     def _send(self, h: WorkerHandle, chunks) -> None:
@@ -481,13 +575,27 @@ class FleetController:
 
     def poll_workers(self) -> None:
         """Detect silently-dead workers (SIGKILL leaves the data socket
-        buffering for a while — the exit code does not lie)."""
+        buffering for a while — the exit code does not lie), and, when a
+        heartbeat deadline is configured, hung-but-connected ones (live
+        process, open sockets, no control-plane message for longer than
+        the timeout)."""
         for h in self.workers:
             if (
-                h.proc is not None
+                not h.quarantined
+                and h.proc is not None
                 and h.proc.poll() is not None
                 and not h.report_event.is_set()
             ):
+                self._handle_death(h)
+        if self._hb is not None:
+            for wid in self._hb.dead():
+                h = self.workers[wid]
+                if h.quarantined or h.report_event.is_set() or not h.hb_armed:
+                    # done, written off, or still booting (hello not seen:
+                    # that window belongs to spawn_timeout_s) — not hung
+                    self._hb.ping(wid)
+                    continue
+                self.kill_worker(wid)  # hung: only SIGKILL reaches it
                 self._handle_death(h)
 
     def kill_worker(self, worker_id: int) -> None:
@@ -498,19 +606,53 @@ class FleetController:
             h.proc.wait()
 
     def _handle_death(self, h: WorkerHandle) -> None:
-        if self._closing.is_set():
+        if self._closing.is_set() or h.quarantined:
             return
-        if not self.restart_dead or h.restarts >= self.max_restarts_per_worker:
+        if not self.restart_dead:
             raise RuntimeError(
                 f"worker {h.worker_id} died (exit="
                 f"{h.proc.poll() if h.proc else None}, restarts={h.restarts}); "
                 f"log: {self._log_tail(h)}"
             )
-        self._revive(h)
+        # crash-loop breaker: each revival attempt (successful spawn that
+        # later dies again, or a failed spawn/handshake/replay) burns one of
+        # max_restarts_per_worker; past that the slot is quarantined — its
+        # key-range and exact undelivered count surface in the FleetReport
+        # instead of an infinite revive loop.
+        while h.restarts < self.max_restarts_per_worker:
+            try:
+                self._revive(h)
+                return
+            except (RuntimeError, OSError, TimeoutError) as err:
+                h.last_revive_error = repr(err)
+        self._quarantine(h)
+
+    def _quarantine(self, h: WorkerHandle) -> None:
+        h.quarantined = True
+        for sock in (h.data_sock, h.ctrl_conn):
+            if sock is not None:
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+        h.data_sock = h.ctrl_conn = None
+        if h.proc is not None and h.proc.poll() is None:
+            h.proc.kill()
+            h.proc.wait()
 
     def _revive(self, h: WorkerHandle) -> None:
         """Respawn a dead worker from its last durable checkpoint and
-        replay the journal tail — the cursor-exact restart contract."""
+        replay the journal tail — the cursor-exact restart contract.
+
+        The new incarnation reports the cursor it *actually* restored
+        (damaged generations fall back — see
+        :meth:`repro.checkpoint.manager.CheckpointManager.restore`); the
+        replay is cut at that cursor, so a fallback restore is lossless as
+        long as the journal still covers it.  ``replay_from`` raises when
+        it does not (an acked-durable checkpoint turned out unreadable) —
+        a genuine loss scenario that burns a revival attempt and, when
+        attempts are exhausted, quarantines with exact accounting.
+        """
         h.restarts += 1
         for sock in (h.data_sock, h.ctrl_conn):
             if sock is not None:
@@ -529,10 +671,11 @@ class FleetController:
         self._spawn(h, restore=restore)
         self._await_hello(h)
         expect = restore["cursor"] if restore else 0
-        if h.cursor_base != expect:
+        if h.cursor_base > expect:
             raise RuntimeError(
-                f"worker {h.worker_id} restored cursor {h.cursor_base}, "
-                f"expected {expect}"
+                f"worker {h.worker_id} restored cursor {h.cursor_base} "
+                f"beyond the acked {expect}: the incarnation claims records "
+                f"the controller never saw durable"
             )
         self._send(h, h.journal.replay_from(h.cursor_base))
 
@@ -542,12 +685,14 @@ class FleetController:
         final report, and aggregate."""
         deadline = time.monotonic() + float(timeout_s)
         for h in self.workers:
+            if h.quarantined:
+                continue
             if h.data_sock is not None:
                 try:
                     h.data_sock.shutdown(socket.SHUT_WR)
                 except OSError:
                     self._handle_death(h)
-        pending = list(self.workers)
+        pending = [h for h in self.workers if not h.quarantined]
         while pending:
             if time.monotonic() > deadline:
                 raise TimeoutError(
@@ -556,6 +701,8 @@ class FleetController:
                 )
             still = []
             for h in pending:
+                if h.quarantined:
+                    continue  # written off mid-drain; report() accounts it
                 if h.report_event.wait(timeout=0.2):
                     if h.error is not None:
                         raise RuntimeError(
@@ -565,12 +712,26 @@ class FleetController:
                 elif h.proc is not None and h.proc.poll() is not None:
                     # died mid-drain: revive, replay, re-signal drain
                     self._handle_death(h)
-                    try:
-                        h.data_sock.shutdown(socket.SHUT_WR)
-                    except OSError:
-                        pass
-                    still.append(h)
+                    if not h.quarantined:
+                        try:
+                            h.data_sock.shutdown(socket.SHUT_WR)
+                        except OSError:
+                            pass
+                        still.append(h)
                 else:
+                    if self._hb is not None:
+                        # hung-but-connected mid-drain is still a death;
+                        # nothing else calls poll_workers during finish
+                        gen_before = h.generation
+                        self.poll_workers()
+                        if h.quarantined:
+                            continue
+                        if h.generation != gen_before:
+                            # killed + revived: re-signal the drain
+                            try:
+                                h.data_sock.shutdown(socket.SHUT_WR)
+                            except OSError:
+                                pass
                     still.append(h)
             pending = still
         self._t1 = time.monotonic()
@@ -602,22 +763,50 @@ class FleetController:
             return TelemetrySnapshot(engine="fleet")
         return TelemetrySnapshot.merge(tels)
 
+    def _quarantine_entry(self, h: WorkerHandle) -> Dict[str, Any]:
+        """Exact loss accounting for one quarantined slot: every record
+        routed to it is journaled; the part durably checkpointed before the
+        crash loop counts as delivered, the rest is the undelivered tail."""
+        acked = int(h.last_ckpt["cursor"]) if h.last_ckpt else 0
+        lo, hi = host_key_range(h.worker_id, self.n_workers)
+        return {
+            "worker": h.worker_id,
+            "key_hash_lo": lo,
+            "key_hash_hi": hi,
+            "journaled": h.journal.total,
+            "delivered": acked,
+            "undelivered": h.journal.total - acked,
+            "restarts": h.restarts,
+            "last_error": h.last_revive_error or h.error,
+            "log_tail": self._log_tail(h),
+        }
+
     def report(self) -> FleetReport:
-        tels = [h.report for h in self.workers if h.report is not None]
-        if len(tels) != self.n_workers:
-            raise RuntimeError("report() before every worker reported")
-        merged = TelemetrySnapshot.merge(tels)
-        sessions = [t.session for t in tels if t.session is not None]
-        if sessions:
-            merged.session = TelemetrySnapshot.merge(sessions)
+        live = [h for h in self.workers if not h.quarantined]
+        tels = [h.report for h in live if h.report is not None]
+        if len(tels) != len(live):
+            raise RuntimeError("report() before every live worker reported")
+        if tels:
+            merged = TelemetrySnapshot.merge(tels)
+            sessions = [t.session for t in tels if t.session is not None]
+            if sessions:
+                merged.session = TelemetrySnapshot.merge(sessions)
+        else:  # every worker quarantined: nothing to merge
+            merged = TelemetrySnapshot(engine="fleet")
         wall = (self._t1 or time.monotonic()) - (self._t0 or 0.0)
-        delivered = sum(h.report_cursor or 0 for h in self.workers)
+        quarantine = [
+            self._quarantine_entry(h) for h in self.workers if h.quarantined
+        ]
+        delivered = sum(h.report_cursor or 0 for h in live) + sum(
+            q["delivered"] for q in quarantine
+        )
         per_worker = [
             {
                 "worker": h.worker_id,
                 "delivered": h.report_cursor,
                 "journaled": h.journal.total,
                 "restarts": h.restarts,
+                "quarantined": h.quarantined,
                 "ingest_rate": (h.report.ingest_rate if h.report else None),
                 "records_fed": (h.report.records_fed if h.report else None),
             }
@@ -641,4 +830,6 @@ class FleetController:
             restarts=sum(h.restarts for h in self.workers),
             snapshot_paths=[h.snapshot_path for h in self.workers],
             snapshot_triples=triples,
+            quarantined=quarantine,
+            records_quarantined=sum(q["undelivered"] for q in quarantine),
         )

@@ -41,6 +41,21 @@ def host_prefix_bits(n_hosts: int) -> Optional[int]:
     return None
 
 
+def host_key_range(host: int, n_hosts: int) -> Tuple[int, int]:
+    """The half-open ``[lo, hi)`` interval of 32-bit key hashes that
+    :func:`route_host` assigns to ``host``: the multiply-shift reduction
+    ``(h * H) >> 32 == i`` holds exactly for ``h`` in
+    ``[ceil(i * 2^32 / H), ceil((i+1) * 2^32 / H))``.  This is what a
+    quarantine report surfaces — the key space that lost its owner."""
+    n = int(n_hosts)
+    i = int(host)
+    if n < 1 or not 0 <= i < n:
+        raise ValueError(f"need 0 <= host < n_hosts, got {host}/{n_hosts}")
+    lo = -((-i << 32) // n)  # ceil(i * 2^32 / n)
+    hi = -((-(i + 1) << 32) // n)
+    return lo, min(hi, 1 << 32)
+
+
 def route_host(rows: np.ndarray, cols: np.ndarray, n_hosts: int) -> np.ndarray:
     """Which of ``n_hosts`` owns key ``(row, col)``: the top end of
     :func:`~repro.serve.router.key_hash32_numpy` via multiply-shift range

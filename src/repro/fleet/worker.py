@@ -81,14 +81,24 @@ def _restore_session(sess, restore_dir: str, step: Optional[int]) -> Dict[str, A
     save_dir = sess._ckpt_dir
     sess._ckpt_dir, sess._mgr = restore_dir, None
     try:
-        return sess.restore(step=step)
+        return sess.restore(step=step, fallback=True)
     finally:
         sess._ckpt_dir, sess._mgr = save_dir, None
 
 
 def run_worker(worker_id: int, controller: str) -> int:
+    # Bind this process to its fleet slot BEFORE anything builds a
+    # FaultPlan from the environment, so only_worker-scoped specs in the
+    # controller's propagated plan target exactly this worker.
+    from repro.faults import GENERATION_ENV_VAR, WORKER_ENV_VAR, RetryPolicy
+
+    os.environ[WORKER_ENV_VAR] = str(worker_id)
     host, _, port = controller.rpartition(":")
-    ctrl = socket.create_connection((host or "127.0.0.1", int(port)), timeout=30)
+    ctrl = RetryPolicy(max_attempts=8, base_delay_s=0.05, deadline_s=30.0).call(
+        lambda: socket.create_connection(
+            (host or "127.0.0.1", int(port)), timeout=30
+        )
+    )
     ctrl_lock = threading.Lock()
     reader = ctrl.makefile("r", encoding="utf-8")
     _send(ctrl, {"type": "attach", "worker": worker_id, "pid": os.getpid()},
@@ -112,21 +122,33 @@ def run_worker(worker_id: int, controller: str) -> int:
     cursor_base = 0
     restore = plan.get("restore")
     if restore:
-        extra = _restore_session(sess, restore["dir"], restore.get("step"))
-        cursor_base = int(extra.get("cursor", 0))
-        if restore.get("cursor") is not None and cursor_base != int(
-            restore["cursor"]
-        ):
-            raise RuntimeError(
-                f"restored cursor {cursor_base} != controller's acked cursor "
-                f"{restore['cursor']}: the journal replay would be misaligned"
-            )
+        # fallback=True: if the acked generation is torn/corrupt, walk back
+        # to the newest one that verifies; if NOTHING loads, come up fresh
+        # at cursor 0.  Either way, ``hello`` reports the cursor actually
+        # restored and the controller cuts its journal replay there — it,
+        # not this process, decides whether that cursor is recoverable.
+        from repro.checkpoint.manager import CheckpointDamaged
+
+        try:
+            extra = _restore_session(sess, restore["dir"], restore.get("step"))
+            cursor_base = int(extra.get("cursor", 0))
+        except (CheckpointDamaged, FileNotFoundError):
+            cursor_base = 0
 
     src = serve.TCPSource(
         port=0, encoding=plan.get("encoding", "binary"), linger=False
     ).start()
     serve_cfg = ServeConfig.from_dict(plan.get("serve") or {})
     server = D4MServer(sess, src, serve_cfg)
+    faults = server._faults  # one shared instance for every worker-side site
+    if faults is not None:
+        # rebind explicitly: the plan may have arrived via the serve config's
+        # wire form rather than the environment, in which case from_env's
+        # auto-binding never ran
+        faults.bind(worker_id)
+        gen = os.environ.get(GENERATION_ENV_VAR)
+        if gen:
+            faults.bind_generation(int(gen))
 
     stop_requested = threading.Event()
 
@@ -162,6 +184,15 @@ def run_worker(worker_id: int, controller: str) -> int:
     last_ckpt_step = -1
     try:
         while not server._done.wait(timeout=interval):
+            if faults is not None and faults.fire(
+                "worker.hang", cursor=server.batches_fed
+            ) is not None:
+                # hung-but-connected: the process stays alive and every
+                # socket stays open, but no control-plane message ever
+                # arrives again — only the controller's heartbeat deadline
+                # can tell this apart from a healthy quiet worker
+                while True:
+                    time.sleep(3600.0)
             _send(ctrl, {
                 "type": "telemetry", "worker": worker_id,
                 "telemetry": server.telemetry().to_json(),
@@ -189,17 +220,33 @@ def run_worker(worker_id: int, controller: str) -> int:
                 }, ctrl_lock)
         snapshot_path = plan.get("snapshot_path")
         if snapshot_path:
+            # stale tmp files from a crashed earlier incarnation of this
+            # generation must not accumulate next to the snapshot
+            snap_dir = os.path.dirname(snapshot_path) or "."
+            base = os.path.basename(snapshot_path)
+            for name in os.listdir(snap_dir):
+                if name.startswith(base + ".tmp-"):
+                    try:
+                        os.remove(os.path.join(snap_dir, name))
+                    except OSError:
+                        pass
             snap = sess.snapshot()
             nnz = int(snap.nnz)
+            # temp-file + fsync + atomic rename: the controller can never
+            # observe (and try to merge) a half-written npz, even across a
+            # crash mid-savez or a power cut between write and rename
             tmp = f"{snapshot_path}.tmp-{os.getpid()}.npz"
-            np.savez(
-                tmp,
-                rows=np.asarray(snap.rows[:nnz]),
-                cols=np.asarray(snap.cols[:nnz]),
-                vals=np.asarray(snap.vals[:nnz]),
-                nnz=nnz,
-                overflow=bool(snap.overflow),
-            )
+            with open(tmp, "wb") as f:
+                np.savez(
+                    f,
+                    rows=np.asarray(snap.rows[:nnz]),
+                    cols=np.asarray(snap.cols[:nnz]),
+                    vals=np.asarray(snap.vals[:nnz]),
+                    nnz=nnz,
+                    overflow=bool(snap.overflow),
+                )
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(tmp, snapshot_path)
         tel = report.telemetry.to_json()
         _send(ctrl, {

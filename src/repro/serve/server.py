@@ -25,6 +25,7 @@ replay test recovers from.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import time
 from typing import Dict, List, Optional
@@ -72,6 +73,22 @@ class D4MServer:
         self.session = session
         self.source = source
         self.config = (config or ServeConfig()).validate()
+        # Fault plan resolution: an explicit config plan wins; otherwise the
+        # environment (how fleet workers inherit the controller's plan).
+        # One instance is shared with the source and the session's
+        # checkpoint manager so in-process chaos tests see every fire in a
+        # single summary().
+        if self.config.faults is not None:
+            self._faults = self.config.faults
+        else:
+            from repro.faults import FaultPlan
+
+            self._faults = FaultPlan.from_env()
+        if self._faults is not None:
+            if hasattr(self.source, "set_faults"):
+                self.source.set_faults(self._faults)
+            if session._ckpt_dir is not None:
+                session._manager().set_faults(self._faults)
         if (
             self.config.max_batch is not None
             and self.config.max_batch > session.batch_size
@@ -183,10 +200,28 @@ class D4MServer:
                     continue  # keep popping so a blocked producer unwinds
                 rows, cols, vals, live = item
                 in_flight = item
+                if self._faults is not None:
+                    spec = self._faults.fire(
+                        "router.slow_consumer", cursor=self.batches_fed
+                    )
+                    if spec is not None:
+                        # a consumer that can't keep up: the bounded queue
+                        # fills behind us and the backpressure policy
+                        # (block/drop) engages upstream
+                        time.sleep(float(spec.args.get("seconds", 0.05)))
                 self._dispatch(rows, cols, vals)
                 self.batches_fed += 1
                 self.records_fed += int(live)
                 in_flight = None
+                if self._faults is not None:
+                    spec = self._faults.fire(
+                        "worker.crash_after_n_batches", cursor=self.batches_fed
+                    )
+                    if spec is not None:
+                        # SIGKILL shape: no unwind, no final checkpoint —
+                        # only a durable earlier generation + journal
+                        # replay can recover this worker
+                        os._exit(int(spec.args.get("exit_code", 137)))
                 every = self.config.checkpoint_every
                 if every is not None and self.batches_fed % every == 0:
                     self._checkpoint()

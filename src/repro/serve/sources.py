@@ -96,6 +96,7 @@ class TCPSource(Source):
         linger: bool = False,
         poll_s: float = 0.05,
         recv_bytes: int = 1 << 16,
+        faults=None,
     ):
         super().__init__()
         self.host = host
@@ -107,6 +108,15 @@ class TCPSource(Source):
         self.recv_bytes = int(recv_bytes)
         self._listener: Optional[socket.socket] = None
         self.connections_seen = 0
+        self.resets_injected = 0
+        # faults: Optional[repro.faults.FaultPlan] — drives the
+        # ``source.conn_reset`` site (forcibly drop one live producer
+        # connection as if the peer RST it).  The serve loop attaches the
+        # session plan via `set_faults`; standalone sources pass it here.
+        self._faults = faults
+
+    def set_faults(self, faults) -> None:
+        self._faults = faults
 
     def start(self) -> "TCPSource":
         if self._listener is None:
@@ -147,6 +157,23 @@ class TCPSource(Source):
                         self.connections_seen += 1
                         continue
                     conn = key.fileobj
+                    if self._faults is not None:
+                        spec = self._faults.fire(
+                            "source.conn_reset", cursor=self.records_out
+                        )
+                        if spec is not None:
+                            # peer-RST shape: already-parsed records
+                            # survive, the buffered partial tail is lost
+                            # (counted malformed by the final drain), and
+                            # bytes still in the kernel buffer vanish
+                            self.resets_injected += 1
+                            chunk, _ = self._drain(buffers, conn, final=True)
+                            sel.unregister(conn)
+                            conn.close()
+                            del buffers[conn]
+                            if chunk is not None:
+                                yield chunk
+                            continue
                     try:
                         data = conn.recv(self.recv_bytes)
                     except BlockingIOError:

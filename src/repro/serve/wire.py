@@ -253,20 +253,57 @@ def send_triples(
     encoding: str = "text",
     chunk_records: int = 4096,
     timeout_s: float = 30.0,
+    retry=None,
+    faults=None,
 ) -> int:
     """Stream a triple batch to a :class:`~repro.serve.sources.TCPSource`.
 
     Splits into ``chunk_records``-sized sends so the receiver interleaves
-    parsing with the transfer; returns the number of records sent.  The
-    write path inherits TCP flow control, which is how the server's
+    parsing with the transfer; returns the number of records *fully sent*.
+    The write path inherits TCP flow control, which is how the server's
     ``"block"`` backpressure policy ultimately reaches the producer.
+
+    The connect is retried under ``retry`` (a
+    :class:`repro.faults.RetryPolicy`; the default survives a worker that
+    bound its ephemeral port but is not listening yet — previously every
+    caller hand-rolled a sleep loop around the first ``ECONNREFUSED``).
+    Pass ``retry=False`` to fail on the first error.
+
+    ``faults`` (a :class:`repro.faults.FaultPlan`) drives the
+    ``wire.truncate_frame`` site: when it fires, half of one chunk's
+    encoded bytes are written and the connection is closed — the shape of
+    a producer dying mid-frame.  The return value counts only records
+    whose bytes were fully handed to the kernel, so the caller's ledger
+    stays exact.
     """
+    from repro.faults import FaultPlan, RetryPolicy
+
+    if retry is None:
+        retry = RetryPolicy(deadline_s=timeout_s)
+    if faults is None:
+        faults = FaultPlan.from_env()
     rows = np.asarray(rows).ravel()
     cols = np.asarray(cols).ravel()
     vals = np.asarray(vals).ravel()
     n = rows.shape[0]
-    with socket.create_connection((host, port), timeout=timeout_s) as sock:
+
+    def _connect() -> socket.socket:
+        return socket.create_connection((host, port), timeout=timeout_s)
+
+    sock = _connect() if retry is False else retry.call(
+        _connect, retry_on=(ConnectionError, socket.timeout, OSError)
+    )
+    sent = 0
+    with sock:
         for lo in range(0, n, chunk_records):
             hi = min(lo + chunk_records, n)
-            sock.sendall(encode(rows[lo:hi], cols[lo:hi], vals[lo:hi], encoding))
-    return int(n)
+            payload = encode(rows[lo:hi], cols[lo:hi], vals[lo:hi], encoding)
+            if faults is not None:
+                spec = faults.fire("wire.truncate_frame", cursor=sent)
+                if spec is not None:
+                    cut = int(spec.args.get("keep_bytes", len(payload) // 2))
+                    sock.sendall(payload[:max(0, cut)])
+                    return sent  # these records were NOT fully sent
+            sock.sendall(payload)
+            sent = hi
+    return int(sent)

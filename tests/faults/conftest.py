@@ -1,0 +1,42 @@
+"""Chaos-suite fixtures: the per-fault recovery report.
+
+Every chaos test records what it injected and which invariant survived via
+the ``chaos_record`` fixture; at session end the accumulated records are
+written as JSON to ``$CHAOS_REPORT_PATH`` (the CI ``chaos-smoke`` job
+uploads it as an artifact).  Without the env var the suite runs normally
+and writes nothing.
+"""
+import json
+import os
+
+import pytest
+
+_RESULTS = []
+
+
+@pytest.fixture
+def chaos_record(request):
+    """Record one injection outcome: ``chaos_record(site, invariant=...,
+    seed=..., **details)``.  ``invariant`` names the recovery contract the
+    test asserted (``bit_identical`` or ``exact_accounting``)."""
+
+    def record(site, invariant, seed=None, **details):
+        _RESULTS.append({
+            "test": request.node.nodeid,
+            "site": site,
+            "invariant": invariant,
+            "seed": seed,
+            **details,
+        })
+
+    return record
+
+
+def pytest_sessionfinish(session, exitstatus):
+    path = os.environ.get("CHAOS_REPORT_PATH")
+    if path and _RESULTS:
+        with open(path, "w") as f:
+            json.dump(
+                {"exitstatus": int(exitstatus), "results": _RESULTS},
+                f, indent=2, sort_keys=True,
+            )

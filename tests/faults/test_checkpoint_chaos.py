@@ -1,0 +1,237 @@
+"""Checkpoint-damage chaos: injected torn/corrupt publishes and
+hand-damaged directories, restored through the generation-fallback walk.
+
+Invariant class (exact recovery): restore lands on the newest generation
+that verifies, its cursor is trusted, and replaying the stream tail from
+that cursor reproduces the clean run bit-identically.  When *no*
+generation survives, restore raises ``CheckpointDamaged`` — never returns
+silently-wrong state.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import d4m, serve
+from repro.checkpoint.manager import (
+    CheckpointDamaged,
+    CheckpointManager,
+)
+from repro.faults import FaultPlan, Trigger
+
+BATCH = 32
+CUTS = (8, 32)
+
+
+def _state(step):
+    # a small but multi-leaf pytree, values derived from step so each
+    # generation is distinguishable after restore
+    return {
+        "w": np.full((4, 4), float(step), np.float32),
+        "cursor": np.asarray([step * 10], np.int64),
+    }
+
+
+def _save_generations(mgr, steps):
+    for s in steps:
+        mgr.save(s, _state(s), extra={"cursor": s * 10})
+
+
+def _ckpt_npz(directory, step):
+    return os.path.join(directory, f"ckpt-{step:09d}", "arrays.npz")
+
+
+# -- injected damage (the fault sites) ---------------------------------------
+
+def test_torn_write_falls_back_one_generation(tmp_path, chaos_record):
+    plan = FaultPlan().add("checkpoint.torn_write", Trigger.once_at(2))
+    mgr = CheckpointManager(str(tmp_path), faults=plan)
+    _save_generations(mgr, [1, 2])
+    assert plan.summary()["checkpoint.torn_write"]["fires"] == 1
+    # the torn generation is visible (published) but fails verification
+    with pytest.raises(CheckpointDamaged, match="torn write"):
+        mgr.restore(_state(0), step=2, fallback=False)
+    state, extra = mgr.restore(_state(0))
+    assert extra["step"] == 1 and extra["cursor"] == 10
+    np.testing.assert_array_equal(state["w"], _state(1)["w"])
+    chaos_record("checkpoint.torn_write", invariant="exact_accounting",
+                 fell_back_to_step=extra["step"])
+
+
+def test_corrupt_payload_crc_detected_and_skipped(tmp_path, chaos_record):
+    plan = FaultPlan().add("checkpoint.corrupt_payload", Trigger.once_at(3))
+    mgr = CheckpointManager(str(tmp_path), faults=plan)
+    _save_generations(mgr, [1, 2, 3])
+    with pytest.raises(CheckpointDamaged, match="crc32"):
+        mgr.restore(_state(0), step=3, fallback=False)
+    state, extra = mgr.restore(_state(0))
+    assert extra["step"] == 2
+    np.testing.assert_array_equal(state["w"], _state(2)["w"])
+    chaos_record("checkpoint.corrupt_payload", invariant="exact_accounting",
+                 fell_back_to_step=extra["step"])
+
+
+def test_all_generations_damaged_raises(tmp_path, chaos_record):
+    plan = FaultPlan().add("checkpoint.torn_write", Trigger.always())
+    mgr = CheckpointManager(str(tmp_path), faults=plan)
+    _save_generations(mgr, [1, 2])
+    with pytest.raises(CheckpointDamaged, match="all 2 checkpoint"):
+        mgr.restore(_state(0))
+    chaos_record("checkpoint.torn_write", invariant="exact_accounting",
+                 outcome="all_damaged_raises")
+
+
+# -- hand-damaged directories (satellite: restore-from-damaged matrix) -------
+
+def test_hand_truncated_npz_falls_back(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    _save_generations(mgr, [1, 2, 3])
+    npz = _ckpt_npz(str(tmp_path), 3)
+    with open(npz, "r+b") as f:
+        f.truncate(os.path.getsize(npz) // 3)
+    state, extra = mgr.restore(_state(0))
+    assert extra["step"] == 2
+    np.testing.assert_array_equal(state["w"], _state(2)["w"])
+
+
+def test_hand_flipped_byte_falls_back(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    _save_generations(mgr, [1, 2, 3])
+    npz = _ckpt_npz(str(tmp_path), 3)
+    size = os.path.getsize(npz)
+    with open(npz, "r+b") as f:
+        f.seek(size // 2)
+        b = f.read(1)
+        f.seek(size // 2)
+        f.write(bytes([b[0] ^ 0xFF]))
+    state, extra = mgr.restore(_state(0))
+    assert extra["step"] == 2
+
+
+def test_missing_manifest_generation_is_invisible(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    _save_generations(mgr, [1, 2, 3])
+    os.remove(os.path.join(str(tmp_path), "ckpt-000000003", "manifest.json"))
+    # no manifest == never published: all_steps() skips it entirely
+    assert mgr.all_steps() == [1, 2]
+    state, extra = mgr.restore(_state(0))
+    assert extra["step"] == 2
+
+
+def test_missing_arrays_generation_falls_back(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    _save_generations(mgr, [1, 2])
+    os.remove(_ckpt_npz(str(tmp_path), 2))
+    state, extra = mgr.restore(_state(0))
+    assert extra["step"] == 1
+
+
+def test_garbled_manifest_falls_back(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    _save_generations(mgr, [1, 2])
+    with open(os.path.join(str(tmp_path), "ckpt-000000002",
+                           "manifest.json"), "w") as f:
+        f.write("{not json")
+    state, extra = mgr.restore(_state(0))
+    assert extra["step"] == 1
+
+
+def test_pinned_step_damaged_raises_without_fallback(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    _save_generations(mgr, [1, 2])
+    npz = _ckpt_npz(str(tmp_path), 2)
+    with open(npz, "r+b") as f:
+        f.truncate(10)
+    # pinned step defaults to fallback=False: damage is an error
+    with pytest.raises(CheckpointDamaged):
+        mgr.restore(_state(0), step=2)
+    # explicit fallback walks below the pin, never above it
+    state, extra = mgr.restore(_state(0), step=2, fallback=True)
+    assert extra["step"] == 1
+
+
+def test_pre_crc_manifest_still_loads(tmp_path):
+    """Manifests written before the integrity fields existed (no
+    arrays_bytes/arrays_crc32) must restore without checks, not fail."""
+    mgr = CheckpointManager(str(tmp_path))
+    _save_generations(mgr, [1])
+    mpath = os.path.join(str(tmp_path), "ckpt-000000001", "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    del manifest["arrays_bytes"], manifest["arrays_crc32"]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    state, extra = mgr.restore(_state(0))
+    assert extra["step"] == 1
+
+
+# -- end to end through the serve stack --------------------------------------
+
+def _records(seed, n, space=64):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.integers(0, space, n).astype(np.int32),
+        rng.integers(0, space, n).astype(np.int32),
+        np.ones(n, np.float32),
+    )
+
+
+def _session(**kw):
+    return d4m.D4MStream(d4m.StreamConfig(
+        cuts=CUTS, top_capacity=4096, batch_size=BATCH,
+        instances_per_device=1, snapshot_cap=8192,
+    ), **kw)
+
+
+def test_serve_restore_from_damaged_newest_generation_replays_bit_identical(
+    tmp_path, chaos_record
+):
+    """The full contract: serve with periodic checkpoints, damage the
+    newest published generation, restore on a fresh session (falls back a
+    generation), re-verify the cursor, replay the tail — bit-identical to
+    the uninterrupted run."""
+    n = 12 * BATCH
+    r, c, v = _records(seed=5, n=n)
+
+    ref = _session()
+    ref.serve(serve.ArraySource(r, c, v, chunk_records=BATCH),
+              max_latency_ms=1e9)
+    want = ref.snapshot()
+
+    sess = _session(checkpoint_dir=str(tmp_path))
+    report = sess.serve(
+        serve.ArraySource(r, c, v, chunk_records=BATCH),
+        max_latency_ms=1e9, checkpoint_every=4,
+    )
+    assert report.drained
+    steps = CheckpointManager(str(tmp_path)).all_steps()
+    assert len(steps) >= 2
+    # damage the newest generation after the fact (lying disk)
+    with open(_ckpt_npz(str(tmp_path), steps[-1]), "r+b") as f:
+        f.truncate(16)
+
+    fresh = _session(checkpoint_dir=str(tmp_path))
+    extra = fresh.restore(fallback=True)
+    cursor = extra["cursor"]
+    assert extra["step"] == steps[-2]
+    assert 0 < cursor < n
+    assert cursor % BATCH == 0, "fallback cursor still on a batch boundary"
+    replay = fresh.serve(
+        serve.ArraySource(r[cursor:], c[cursor:], v[cursor:],
+                          chunk_records=BATCH),
+        max_latency_ms=1e9,
+    )
+    assert replay.drained and replay.records_fed == n - cursor
+    got = fresh.snapshot()
+    np.testing.assert_array_equal(np.asarray(got.rows), np.asarray(want.rows))
+    np.testing.assert_array_equal(np.asarray(got.cols), np.asarray(want.cols))
+    np.testing.assert_array_equal(np.asarray(got.vals), np.asarray(want.vals))
+    chaos_record("checkpoint.torn_write", invariant="bit_identical",
+                 fell_back_to_step=extra["step"], replayed=n - cursor)
+
+
+def test_serve_restore_with_whole_directory_gone_raises(tmp_path):
+    sess = _session(checkpoint_dir=str(tmp_path / "never_written"))
+    with pytest.raises(FileNotFoundError):
+        sess.restore()

@@ -1,0 +1,285 @@
+"""Unit contracts of the fault plane itself: triggers, scoping,
+serialization, and the retry policy.  Everything here is pure-host and
+fast — the process-level injection scenarios live in the sibling
+``test_*_chaos.py`` modules.
+"""
+import json
+import os
+import socket
+
+import pytest
+
+from repro.faults import (
+    ENV_VAR,
+    GENERATION_ENV_VAR,
+    SITES,
+    WORKER_ENV_VAR,
+    FaultPlan,
+    FaultSpec,
+    RetryPolicy,
+    Trigger,
+)
+
+SITE = "router.slow_consumer"  # an arbitrary valid site for trigger tests
+
+
+def _seeds():
+    with open(os.path.join(os.path.dirname(__file__), "seeds.json")) as f:
+        return json.load(f)
+
+
+# -- sites are a closed set --------------------------------------------------
+
+def test_every_documented_site_exists():
+    # the catalogue the chaos suite covers; adding a site here without a
+    # scenario in the chaos modules should be a conscious decision
+    assert set(SITES) == {
+        "wire.truncate_frame",
+        "source.conn_reset",
+        "router.slow_consumer",
+        "worker.crash_after_n_batches",
+        "worker.hang",
+        "checkpoint.torn_write",
+        "checkpoint.corrupt_payload",
+        "controller.journal_disk_full",
+    }
+
+
+def test_unknown_site_rejected_at_construction_and_fire():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan().add("router.typo", Trigger.always())
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan().fire("router.typo")
+
+
+# -- triggers ----------------------------------------------------------------
+
+def test_nth_trigger_fires_exactly_once():
+    plan = FaultPlan().add(SITE, Trigger.nth(3))
+    hits = [plan.fire(SITE) is not None for _ in range(10)]
+    assert hits == [False, False, True] + [False] * 7
+    agg = plan.summary()[SITE]
+    assert agg == {"calls": 10, "fires": 1}
+
+
+def test_once_at_trigger_latches_on_cursor():
+    plan = FaultPlan().add(SITE, Trigger.once_at(100))
+    assert plan.fire(SITE, cursor=50) is None
+    assert plan.fire(SITE) is None  # no cursor context: cannot trip
+    assert plan.fire(SITE, cursor=150) is not None
+    assert plan.fire(SITE, cursor=999) is None  # latched
+
+
+def test_always_trigger_fires_every_consult():
+    plan = FaultPlan().add(SITE, Trigger.always())
+    assert all(plan.fire(SITE) is not None for _ in range(5))
+
+
+@pytest.mark.parametrize("seed", _seeds()["prob_trigger_seeds"])
+def test_prob_trigger_is_deterministic_per_seed(seed):
+    def pattern():
+        plan = FaultPlan().add(SITE, Trigger.prob(0.3, seed=seed))
+        return [plan.fire(SITE) is not None for _ in range(64)]
+
+    first, second = pattern(), pattern()
+    assert first == second, "same seed must give the same firing pattern"
+    assert any(first), "p=0.3 over 64 consults should fire at least once"
+    assert not all(first)
+
+
+def test_prob_trigger_validation():
+    with pytest.raises(ValueError):
+        Trigger.prob(0.0)
+    with pytest.raises(ValueError):
+        Trigger.prob(1.5)
+    with pytest.raises(ValueError):
+        Trigger.nth(0)
+
+
+# -- scoping -----------------------------------------------------------------
+
+def test_only_worker_scoping():
+    plan = FaultPlan().add(SITE, Trigger.always(), only_worker=2)
+    assert plan.fire(SITE) is None  # unbound process: not worker 2
+    assert plan.fire(SITE, worker=1) is None
+    assert plan.fire(SITE, worker=2) is not None
+    plan.bind(2)
+    assert plan.fire(SITE) is not None
+
+
+def test_only_generation_scoping():
+    plan = FaultPlan().add(SITE, Trigger.always(), only_generation=0)
+    assert plan.fire(SITE) is None  # unbound: generation unknown
+    plan.bind_generation(0)
+    assert plan.fire(SITE) is not None
+    plan.bind_generation(1)
+    assert plan.fire(SITE) is None
+
+
+# -- serialization -----------------------------------------------------------
+
+def test_env_round_trip_rebuilds_with_fresh_counters():
+    plan = FaultPlan().add(SITE, Trigger.nth(1), args={"seconds": 0.5})
+    assert plan.fire(SITE) is not None  # burn the one-shot
+    env = {ENV_VAR: plan.to_env()}
+    rebuilt = FaultPlan.from_env(env)
+    spec = rebuilt.fire(SITE)
+    assert spec is not None, "fresh counters: the one-shot is re-armed"
+    assert spec.args == {"seconds": 0.5}
+
+
+def test_from_env_binds_worker_and_generation():
+    plan = FaultPlan().add(
+        SITE, Trigger.always(), only_worker=3, only_generation=1
+    )
+    env = {ENV_VAR: plan.to_env(), WORKER_ENV_VAR: "3",
+           GENERATION_ENV_VAR: "1"}
+    assert FaultPlan.from_env(env).fire(SITE) is not None
+    env[GENERATION_ENV_VAR] = "0"
+    assert FaultPlan.from_env(env).fire(SITE) is None
+    env[GENERATION_ENV_VAR] = "1"
+    env[WORKER_ENV_VAR] = "2"
+    assert FaultPlan.from_env(env).fire(SITE) is None
+
+
+def test_from_env_unset_is_none():
+    assert FaultPlan.from_env({}) is None
+
+
+def test_unknown_keys_rejected():
+    with pytest.raises(ValueError, match="unknown FaultSpec keys"):
+        FaultSpec.from_dict({"site": SITE, "trigger": {"kind": "always"},
+                             "typo": 1})
+    with pytest.raises(ValueError, match="unknown FaultPlan keys"):
+        FaultPlan.from_dict({"specs": [], "typo": 1})
+
+
+def test_serve_config_carries_plan_over_wire():
+    from repro import d4m
+
+    plan = FaultPlan().add(SITE, Trigger.nth(2), only_worker=1)
+    cfg = d4m.ServeConfig(faults=plan)
+    rebuilt = d4m.ServeConfig.from_dict(cfg.to_dict())
+    assert isinstance(rebuilt.faults, FaultPlan)
+    assert rebuilt.faults.specs[0].only_worker == 1
+    assert rebuilt.faults.specs[0].trigger.n == 2
+    # and through StreamConfig (the fleet's plan message)
+    sc = d4m.StreamConfig(cuts=(8,), top_capacity=64, batch_size=8,
+                          serve=cfg)
+    rt = d4m.StreamConfig.from_dict(sc.to_dict())
+    assert isinstance(rt.serve.faults, FaultPlan)
+
+
+# -- retry policy ------------------------------------------------------------
+
+def test_retry_delays_are_deterministic_and_bounded():
+    pol = RetryPolicy(max_attempts=5, base_delay_s=0.1, max_delay_s=0.4,
+                      jitter=0.1, seed=7)
+    d1, d2 = pol.delays(), RetryPolicy(
+        max_attempts=5, base_delay_s=0.1, max_delay_s=0.4, jitter=0.1, seed=7
+    ).delays()
+    assert d1 == d2
+    assert len(d1) == 4  # one fewer than attempts
+    assert all(0 < d <= 0.4 * 1.1 + 1e-9 for d in d1)
+    # different seed, different jitter
+    assert d1 != RetryPolicy(
+        max_attempts=5, base_delay_s=0.1, max_delay_s=0.4, jitter=0.1, seed=8
+    ).delays()
+
+
+def test_retry_succeeds_after_transient_failures():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise ConnectionRefusedError("not up yet")
+        return "ok"
+
+    slept = []
+    pol = RetryPolicy(max_attempts=5, base_delay_s=0.01, deadline_s=30.0)
+    assert pol.call(flaky, retry_on=(OSError,), sleep=slept.append) == "ok"
+    assert calls["n"] == 3
+    assert len(slept) == 2
+
+
+def test_retry_exhausts_attempts_and_raises_last_error():
+    def always_down():
+        raise ConnectionRefusedError("down")
+
+    pol = RetryPolicy(max_attempts=3, base_delay_s=0.01)
+    with pytest.raises(ConnectionRefusedError):
+        pol.call(always_down, retry_on=(OSError,), sleep=lambda s: None)
+
+
+def test_retry_respects_deadline():
+    def always_down():
+        raise ConnectionRefusedError("down")
+
+    clock = {"t": 0.0}
+
+    def fake_clock():
+        return clock["t"]
+
+    def fake_sleep(s):
+        clock["t"] += s
+
+    pol = RetryPolicy(max_attempts=100, base_delay_s=1.0, max_delay_s=1.0,
+                      deadline_s=3.0, jitter=0.0)
+    with pytest.raises(ConnectionRefusedError):
+        pol.call(always_down, retry_on=(OSError,), sleep=fake_sleep,
+                 clock=fake_clock)
+    assert clock["t"] <= 3.0 + 1.0
+
+
+def test_retry_does_not_catch_unlisted_errors():
+    def boom():
+        raise KeyError("logic bug")
+
+    with pytest.raises(KeyError):
+        RetryPolicy(max_attempts=5).call(boom, retry_on=(OSError,),
+                                         sleep=lambda s: None)
+
+
+def test_send_triples_retries_until_listener_is_up():
+    """Satellite contract: a producer racing a worker's bind no longer
+    needs a hand-rolled sleep loop — the default retry rides out the
+    ECONNREFUSED window."""
+    import threading
+    import time
+
+    import numpy as np
+
+    from repro import serve
+    from repro.serve import wire
+
+    # reserve a port, then release it so the first connects are refused
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()
+
+    src = serve.TCPSource(port=port, encoding="binary", linger=False)
+    got = []
+
+    def serve_side():
+        time.sleep(0.3)  # the refused-connection window
+        src.start()
+        for chunk in src.chunks():
+            got.append(chunk)
+
+    t = threading.Thread(target=serve_side, daemon=True)
+    t.start()
+    n = 64
+    r = np.arange(n, dtype=np.int32)
+    sent = wire.send_triples("127.0.0.1", port, r, r,
+                             np.ones(n, np.float32), encoding="binary")
+    t.join(timeout=30)
+    assert not t.is_alive()
+    assert sent == n
+    assert sum(int(c[0].shape[0]) for c in got) == n
+
+    # retry=False keeps the old fail-fast behavior
+    with pytest.raises(OSError):
+        wire.send_triples("127.0.0.1", port, r, r, np.ones(n, np.float32),
+                          encoding="binary", retry=False)

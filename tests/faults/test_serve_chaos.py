@@ -1,0 +1,193 @@
+"""Serve-layer chaos: wire truncation, connection resets, and slow
+consumers, each asserted against its invariant class.
+
+* lossless scenarios (``block`` backpressure, clean recovery) must land
+  **bit-identical** to an undisturbed run;
+* lossy scenarios (truncated frame, reset connection, ``drop``
+  backpressure) must account every record **exactly**:
+  ``records_in == records_fed + records_dropped`` on the server and the
+  shortfall visible in ``malformed``/drop counters — never silent loss.
+"""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro import d4m, serve
+from repro.faults import FaultPlan, Trigger
+from repro.serve import wire
+
+BATCH = 32
+CUTS = (8, 32)
+
+
+def _seeds():
+    with open(os.path.join(os.path.dirname(__file__), "seeds.json")) as f:
+        return json.load(f)
+
+
+def _records(seed, n, space=64):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.integers(0, space, n).astype(np.int32),
+        rng.integers(0, space, n).astype(np.int32),
+        np.ones(n, np.float32),
+    )
+
+
+def _session(**kw):
+    return d4m.D4MStream(d4m.StreamConfig(
+        cuts=CUTS, top_capacity=4096, batch_size=BATCH,
+        instances_per_device=1, snapshot_cap=8192,
+    ), **kw)
+
+
+def _assert_bit_identical(got, want):
+    np.testing.assert_array_equal(np.asarray(got.rows), np.asarray(want.rows))
+    np.testing.assert_array_equal(np.asarray(got.cols), np.asarray(want.cols))
+    np.testing.assert_array_equal(np.asarray(got.vals), np.asarray(want.vals))
+
+
+def _serve_tcp(session, faults, n, send):
+    """Run one TCP-fed serve with ``faults`` attached; ``send(port)``
+    produces the stream from a client thread.  Returns the ServeReport."""
+    src = serve.TCPSource(port=0, encoding="binary", linger=False)
+    server = serve.D4MServer(
+        session, src,
+        d4m.ServeConfig(max_latency_ms=1e9, drain_timeout_s=600.0,
+                        faults=faults),
+    ).start()
+    t = threading.Thread(target=send, args=(src.port,), daemon=True)
+    t.start()
+    t.join(timeout=60)
+    assert not t.is_alive()
+    server.join(timeout=600)
+    return server.report()
+
+
+# -- wire.truncate_frame -----------------------------------------------------
+
+@pytest.mark.parametrize("seed", _seeds()["record_seeds"])
+def test_truncated_frame_is_counted_never_folded(seed, chaos_record):
+    """A producer dying mid-frame: the receiver folds every fully-sent
+    record, counts the torn tail malformed, and the client's return value
+    agrees with the server's ledger exactly."""
+    n = 8 * BATCH
+    r, c, v = _records(seed, n)
+    plan = FaultPlan().add("wire.truncate_frame", Trigger.nth(4))
+    session = _session()
+    sent_box = {}
+
+    def send(port):
+        sent_box["sent"] = wire.send_triples(
+            "127.0.0.1", port, r, c, v, encoding="binary",
+            chunk_records=BATCH, faults=plan,
+        )
+
+    report = _serve_tcp(session, None, n, send)
+    sent = sent_box["sent"]
+    assert sent == 3 * BATCH, "the 4th chunk was the truncated one"
+    assert report.records_fed == sent
+    assert report.records_in == report.records_fed + report.records_dropped
+    assert report.malformed >= 1, "the torn tail must be counted"
+    assert plan.summary()["wire.truncate_frame"]["fires"] == 1
+    chaos_record("wire.truncate_frame", invariant="exact_accounting",
+                 seed=seed, sent=sent, fed=report.records_fed,
+                 malformed=report.malformed)
+
+
+# -- source.conn_reset -------------------------------------------------------
+
+@pytest.mark.parametrize("seed", _seeds()["record_seeds"])
+def test_connection_reset_loses_only_the_unparsed_tail(seed, chaos_record):
+    """Peer-RST mid-stream: records parsed before the reset survive, the
+    buffered partial frame is counted malformed, and the server ledger
+    still balances exactly."""
+    n = 8 * BATCH
+    r, c, v = _records(seed, n)
+    # reset once the source has yielded at least one chunk's records
+    plan = FaultPlan().add("source.conn_reset", Trigger.once_at(BATCH))
+    session = _session()
+
+    def send(port):
+        try:
+            wire.send_triples("127.0.0.1", port, r, c, v,
+                              encoding="binary", chunk_records=BATCH,
+                              faults=None)
+        except OSError:
+            pass  # the receiver closed on us: expected
+
+    report = _serve_tcp(session, plan, n, send)
+    assert plan.summary()["source.conn_reset"]["fires"] == 1
+    assert BATCH <= report.records_fed <= n
+    assert report.records_in == report.records_fed + report.records_dropped
+    # the server folded exactly what the source parsed — nothing invented
+    assert report.telemetry.source_records == report.records_in
+    chaos_record("source.conn_reset", invariant="exact_accounting",
+                 seed=seed, fed=report.records_fed,
+                 malformed=report.malformed)
+
+
+# -- router.slow_consumer ----------------------------------------------------
+
+def test_slow_consumer_with_block_backpressure_is_lossless(chaos_record):
+    """Backpressure=block: a stalled feed loop fills the bounded queue and
+    blocks the reader; nothing is dropped and the state is bit-identical
+    to an undisturbed run."""
+    n = 12 * BATCH
+    r, c, v = _records(seed=1, n=n)
+    ref = _session()
+    ref.serve(serve.ArraySource(r, c, v, chunk_records=BATCH),
+              max_latency_ms=1e9)
+    want = ref.snapshot()
+
+    plan = FaultPlan().add("router.slow_consumer", Trigger.nth(1),
+                           args={"seconds": 0.4})
+    sess = _session()
+    report = sess.serve(
+        serve.ArraySource(r, c, v, chunk_records=BATCH),
+        max_latency_ms=1e9, queue_depth=2, backpressure="block",
+        faults=plan,
+    )
+    assert report.drained
+    assert report.records_fed == n
+    assert report.records_dropped == 0
+    assert plan.summary()["router.slow_consumer"]["fires"] == 1
+    _assert_bit_identical(sess.snapshot(), want)
+    chaos_record("router.slow_consumer", invariant="bit_identical",
+                 backpressure="block", blocked_events=report.blocked_events)
+
+
+def test_slow_consumer_with_drop_backpressure_accounts_exactly(chaos_record):
+    """Backpressure=drop: overflow is shed, but every shed record is
+    counted — records_in == fed + dropped holds to the record."""
+    n = 40 * BATCH
+    r, c, v = _records(seed=2, n=n)
+    plan = FaultPlan().add("router.slow_consumer", Trigger.always(),
+                           args={"seconds": 0.05})
+    sess = _session()
+    report = sess.serve(
+        serve.ArraySource(r, c, v, chunk_records=BATCH),
+        max_latency_ms=1e9, queue_depth=2, backpressure="drop",
+        faults=plan,
+    )
+    assert report.drained
+    assert report.records_in == n
+    assert report.records_in == report.records_fed + report.records_dropped
+    assert report.records_dropped > 0, "the stall must actually shed load"
+    chaos_record("router.slow_consumer", invariant="exact_accounting",
+                 backpressure="drop", dropped=report.records_dropped)
+
+
+def test_faults_none_leaves_serve_untouched():
+    """The zero-overhead contract's functional half: no plan, no site
+    consults, identical results to a plain run (the perf half is gated by
+    the serve trend bench)."""
+    n = 4 * BATCH
+    r, c, v = _records(seed=3, n=n)
+    sess = _session()
+    report = sess.serve(serve.ArraySource(r, c, v, chunk_records=BATCH),
+                        max_latency_ms=1e9)
+    assert report.drained and report.records_fed == n

@@ -161,6 +161,40 @@ def test_prefetcher_delivers_in_order():
         np.testing.assert_array_equal(a, b)
 
 
+def test_prefetcher_finite_stream_signals_end_and_joins():
+    """A consumer blocked on next() must get StopIteration when the stream
+    ends — not wait forever — and close() must leave no live thread."""
+
+    class Finite:
+        def __init__(self, n):
+            self.n = n
+
+        def __next__(self):
+            if self.n == 0:
+                raise StopIteration
+            self.n -= 1
+            return {"x": np.zeros(2, np.float32)}
+
+    # drain: exactly 3 batches, then StopIteration (repeatably)
+    pf = Prefetcher(Finite(3), device_put=lambda b: b)
+    got = 0
+    with pytest.raises(StopIteration):
+        while True:
+            next(pf)
+            got += 1
+    assert got == 3
+    with pytest.raises(StopIteration):
+        next(pf)  # the sentinel is re-posted for any later consumer
+    pf.close()
+    assert not pf._thread.is_alive()
+    # close() mid-stream (producer possibly blocked on a full queue) must
+    # also terminate the thread — the unbounded join cannot hang
+    pf2 = Prefetcher(Finite(100), device_put=lambda b: b, depth=1)
+    next(pf2)
+    pf2.close()
+    assert not pf2._thread.is_alive()
+
+
 # --------------------------------------------------------------- compression
 def test_topk_compression_error_feedback_conserves_mass():
     cfg = compression.CompressionConfig(enabled=True, top_k_frac=0.25, min_size=4)
