@@ -1,0 +1,278 @@
+"""Query-plane benchmark: what does querying a live stream cost?
+
+The tentpole claim of the online query plane is that snapshot-isolated
+queries ride along with ingest nearly for free: views are published at
+microbatch boundaries off the device path, degree vectors are maintained
+incrementally on the feed thread, and the executor answers on the source's
+reader thread against immutable buffers.  This bench puts a number on
+"nearly":
+
+* **ingest_only_rate** — the baseline: a pre-generated R-MAT stream pushed
+  through a real loopback TCP socket with the query plane armed
+  (``publish_every`` set, views publishing) but no client ever asking;
+* **mixed_rate** — the same stream, same socket path, while a second
+  connection hammers the live views with a rotating query mix (stats /
+  degrees / top_k / row / get), measuring sustained **query QPS** on the
+  side;
+* the CI-gated verdict ``query_cost``: the mixed run must sustain at least
+  ``1 - COST_CEILING`` of the ingest-only rate AND the final live-view
+  degrees answered *over the wire* must be bit-identical to the drained
+  session's snapshot reduction (unit-weight R-MAT traffic, so the
+  incremental fold's exactness contract applies).
+
+Emits ``BENCH_query.json`` on the ``benchmarks/reporting.py`` schema, so
+``regression_gate.py`` and the trend gate track both rates, the QPS, and
+the verdict automatically.
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.reporting import BenchmarkReport
+from repro import d4m, serve
+from repro.core import analytics
+
+COST_CEILING = 0.10  # mixed ingest may cost at most this fraction of baseline
+
+
+def _config(k: int, batch: int, top: int) -> d4m.StreamConfig:
+    return d4m.StreamConfig(
+        cuts=(2 * batch, 16 * batch),
+        top_capacity=top,
+        batch_size=batch,
+        instances_per_device=k,
+        snapshot_cap=4 * top,
+    )
+
+
+def _workload(batches: int, batch: int, scale: int, seed: int = 0):
+    src = serve.RMATSource(
+        batches * batch, chunk_records=batch, scale=scale, seed=seed,
+        pregenerate=True,
+    )
+    rows, cols, vals = zip(*src.chunks())
+    return np.concatenate(rows), np.concatenate(cols), np.concatenate(vals)
+
+
+def _warmup(sess: d4m.D4MStream, r, c, v, batch: int, space: int) -> None:
+    """Compile the update, publish (snapshot), and degree-lift programs
+    through the same code path, then reset the state."""
+    warm = sess.serve(
+        serve.ArraySource(r[: 2 * batch], c[: 2 * batch], v[: 2 * batch],
+                          chunk_records=batch),
+        max_latency_ms=1e9, publish_every=1,
+    )
+    assert warm.drained
+    # prime the degree lift at every power-of-two bucket the growing
+    # tracker vectors can reach (vertex count <= space), so neither timed
+    # leg pays a first-touch trace the other has already cached
+    b = 256
+    while b <= space:
+        ids = np.zeros(b, np.int32)
+        vals = np.zeros(b, sess.dtype)
+        analytics.degrees_from_vectors(
+            ids, vals, ids, vals, sess.plan.snapshot_cap, sess.sr, sess.dtype
+        )
+        b *= 2
+    # prime the query-op device programs at the hammer's arg shapes, so the
+    # mixed leg measures steady-state QPS, not first-call compiles
+    view = sess.latest_view()
+    view.degrees()
+    view.top_k(10, "out")
+    view.row(0)
+    view.get(0, 0)
+    view.stats()
+    sess.reset()
+
+
+def _hammer(port: int, n_records: int, space: int, sent_done, out) -> None:
+    """Rotate the query mix against the live views until a view covering
+    the whole stream has answered a degrees query, then disconnect (the
+    open client counts as a producer, so leaving would stall the drain)."""
+    rng = np.random.default_rng(1)
+    count = 0
+    t0 = time.perf_counter()
+    with serve.QueryClient("127.0.0.1", port, encoding="binary",
+                           timeout_s=120.0) as qc:
+        while True:
+            op = count % 5
+            if op == 0:
+                rep = qc.request("stats")
+            elif op == 1:
+                rep = qc.request("degrees")
+            elif op == 2:
+                rep = qc.request("top_k", k=10, by="out")
+            elif op == 3:
+                rep = qc.request("row", r=int(rng.integers(0, space)))
+            else:
+                rep = qc.request(
+                    "get", r=int(rng.integers(0, space)),
+                    c=int(rng.integers(0, space)),
+                )
+            assert rep.ok, rep.error
+            count += 1
+            if sent_done.is_set():
+                rep = qc.request("degrees")
+                count += 1
+                if rep.ok and rep.view_records == n_records:
+                    out["final_degrees"] = rep
+                    break
+                time.sleep(0.002)  # the covering view is one publish away
+    dt = time.perf_counter() - t0
+    out["queries"] = count
+    out["qps"] = count / dt
+
+
+def _serve_tcp(sess, r, c, v, batch: int, publish_every: int, space: int,
+               with_queries: bool):
+    src = serve.TCPSource(port=0, encoding="binary", linger=False)
+    server = serve.D4MServer(
+        sess, src,
+        d4m.ServeConfig(max_latency_ms=1e9, publish_every=publish_every,
+                        drain_timeout_s=600.0),
+    ).start()
+    out = {}
+    sent_done = threading.Event()
+    hammerer = None
+    if with_queries:
+        hammerer = threading.Thread(
+            target=_hammer, args=(src.port, r.shape[0], space, sent_done, out),
+            daemon=True,
+        )
+        hammerer.start()
+    sent = serve.send_triples(
+        "127.0.0.1", src.port, r, c, v,
+        encoding="binary", chunk_records=4 * batch,
+    )
+    assert sent == r.shape[0]
+    sent_done.set()
+    if hammerer is not None:
+        hammerer.join(timeout=600)
+        assert not hammerer.is_alive(), "query hammer never saw the full view"
+    assert server.join(timeout=600)
+    report = server.report()
+    assert report.drained and report.records_fed == r.shape[0]
+    assert report.records_dropped == 0 and report.malformed == 0
+    return report, out
+
+
+def _bit_identical(sess: d4m.D4MStream, reply) -> bool:
+    """The wire-served live-view degrees vs the drained snapshot reduction."""
+    want_out, want_in = analytics.degrees(
+        sess.snapshot(), cap=sess.plan.snapshot_cap, sr=sess.sr
+    )
+
+    def live(a):
+        n = int(a.nnz)
+        return np.asarray(a.rows)[:n], np.asarray(a.vals)[:n]
+
+    for ids_key, vals_key, want in (
+        ("out_ids", "out_vals", want_out), ("in_ids", "in_vals", want_in)
+    ):
+        ids, vals = live(want)
+        if not np.array_equal(reply.arrays[ids_key], ids):
+            return False
+        got = np.asarray(reply.arrays[vals_key], np.float32)
+        if not np.array_equal(got.view(np.uint32),
+                              vals.astype(np.float32).view(np.uint32)):
+            return False
+    return True
+
+
+def main(
+    smoke: bool = False,
+    k: int = 8,
+    batches: int | None = None,
+    batch: int | None = None,
+    scale: int | None = None,
+    publish_every: int | None = None,
+):
+    batches = batches if batches is not None else (60 if smoke else 400)
+    batch = batch if batch is not None else (256 if smoke else 512)
+    scale = scale if scale is not None else (14 if smoke else 18)
+    # the last *periodic* publish must cover the whole stream (the final
+    # drain view only appears after the query client disconnects)
+    publish_every = publish_every if publish_every is not None else (
+        6 if smoke else 10
+    )
+    assert batches % publish_every == 0
+    top = int(batches * batch * 1.25)
+    space = 1 << scale
+    r, c, v = _workload(batches, batch, scale)
+    params = {
+        "k_per_device": k, "batches": batches, "batch": batch,
+        "rmat_scale": scale, "publish_every": publish_every,
+    }
+    report = BenchmarkReport("query")
+
+    sess = d4m.D4MStream(_config(k, batch, top))
+    _warmup(sess, r, c, v, batch, space)
+    only, _ = _serve_tcp(sess, r, c, v, batch, publish_every, space,
+                         with_queries=False)
+    print(
+        f"query,ingest_only,k={k},rate={only.ingest_rate:,.0f}/s,"
+        f"wall_s={only.wall_s:.3f},"
+        f"views={only.telemetry['views_published']}", flush=True,
+    )
+    report.add(
+        "ingest_only_rate", params=params,
+        updates_per_sec=only.ingest_rate, wall_s=only.wall_s,
+        views_published=int(only.telemetry["views_published"]),
+    )
+
+    sess = d4m.D4MStream(_config(k, batch, top))
+    _warmup(sess, r, c, v, batch, space)
+    mixed, out = _serve_tcp(sess, r, c, v, batch, publish_every, space,
+                            with_queries=True)
+    cost = 1.0 - mixed.ingest_rate / only.ingest_rate
+    print(
+        f"query,mixed,k={k},rate={mixed.ingest_rate:,.0f}/s,"
+        f"wall_s={mixed.wall_s:.3f},qps={out['qps']:,.0f}/s,"
+        f"queries={out['queries']},cost={cost:.3f}", flush=True,
+    )
+    report.add(
+        "mixed_rate", params=params,
+        updates_per_sec=mixed.ingest_rate, wall_s=mixed.wall_s,
+        query_qps=out["qps"], queries_served=int(out["queries"]),
+        ingest_cost=cost,
+    )
+
+    bit = _bit_identical(sess, out["final_degrees"])
+    passed = bool(cost <= COST_CEILING and bit)
+    print(
+        f"verdict,query_cost,{passed},k={k},cost={cost:.3f},"
+        f"ceiling={COST_CEILING},bit_identical={bit}"
+    )
+    report.add(
+        "query_cost",
+        params={**params, "ceiling": COST_CEILING},
+        passed=passed,
+        ingest_cost=float(cost),
+        bit_identical=bool(bit),
+        query_qps=float(out["qps"]),
+    )
+    report.write()
+    return {"cost": cost, "qps": out["qps"], "bit_identical": bit}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--batches", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--scale", type=int, default=None)
+    ap.add_argument("--publish-every", type=int, default=None)
+    args = ap.parse_args()
+    main(
+        smoke=args.smoke,
+        k=args.k,
+        batches=args.batches,
+        batch=args.batch,
+        scale=args.scale,
+        publish_every=args.publish_every,
+    )

@@ -42,6 +42,7 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 #: the benchmark sections (authoritative; benchmarks/run.py re-exports)
 SECTIONS = (
     "hier", "kernels", "embed", "scaling", "cascade_kernel", "serve", "fleet",
+    "query",
 )
 
 _SECTION_MODULES = {
@@ -52,6 +53,7 @@ _SECTION_MODULES = {
     "cascade_kernel": "benchmarks.bench_cascade_kernel",
     "serve": "benchmarks.bench_serve",
     "fleet": "benchmarks.bench_fleet",
+    "query": "benchmarks.bench_query",
 }
 
 
@@ -236,7 +238,7 @@ class ExperimentSpec:
                 if smoke:
                     params = {"k_values": (1, 8), "groups": 5,
                               "device_sweep": False}
-            else:  # kernels / embed / cascade_kernel / serve / fleet take smoke=
+            else:  # kernels/embed/cascade_kernel/serve/fleet/query take smoke=
                 params = {"smoke": bool(smoke)}
             legs.append(
                 ExperimentLeg(section=section, params=_freeze_params(params))

@@ -60,6 +60,66 @@ def top_k_vertices(deg: Assoc, k: int) -> Tuple[jax.Array, jax.Array]:
     return deg.topk(k)
 
 
+def host_degree_fold(sr: Semiring):
+    """The numpy ufunc matching ``sr.add`` for host-side degree folding,
+    or ``None`` when the semiring's add has no associative-commutative
+    numpy counterpart (the incremental degree tracker then falls back to
+    on-view reduction).
+
+    The fold must reproduce :func:`degrees` exactly for the workloads the
+    equality is promised on: sums are order-exact for integer-valued
+    float32 counts (the paper's unit-weight network traffic), and max/min
+    are order-independent outright.
+    """
+    import numpy as np
+
+    family = sr.name.split(".", 1)[0]
+    if family in ("plus", "count"):
+        return np.add
+    if family == "max":
+        return np.maximum
+    if family == "min":
+        return np.minimum
+    return None  # e.g. "first": not commutative, no incremental fold
+
+
+def degrees_from_vectors(
+    out_ids, out_vals, in_ids, in_vals, cap: int, sr: Semiring, dtype
+) -> Tuple[Assoc, Assoc]:
+    """Lift host-maintained degree vectors into the same ``(vertex, 0)``
+    associative arrays :func:`degrees` produces.
+
+    ``*_ids`` must be unique (each vertex folded once — what
+    :class:`repro.serve.query.DegreeTracker` hands over), so
+    ``from_triples`` only sorts and pads; given exact per-vertex values the
+    result is bit-identical to the snapshot reduction's layout.
+
+    The host vectors are padded with PAD dead slots (dropped by
+    ``from_triples``) up to a power-of-two bucket before lifting: the
+    vectors grow between publishes, and an exact-length lift would re-trace
+    the jitted program at every new length — one compile per published view
+    instead of O(log cap) total.
+    """
+    import numpy as np
+
+    def lift(ids, vals):
+        ids = np.asarray(ids, np.int32)
+        vals = np.asarray(vals, dtype)
+        n = int(ids.shape[0])
+        bucket = max(256, 1 << max(0, n - 1).bit_length())
+        if bucket > n:
+            ids = np.concatenate([ids, np.full(bucket - n, PAD, np.int32)])
+            vals = np.concatenate(
+                [vals, np.full(bucket - n, sr.zero, dtype)]
+            )
+        ids = jnp.asarray(ids)
+        return assoc.from_triples(
+            ids, jnp.zeros_like(ids), jnp.asarray(vals), cap, sr=sr
+        )
+
+    return lift(out_ids, out_vals), lift(in_ids, in_vals)
+
+
 def undirected_view(
     a: Assoc, cap: int | None = None, sr: Semiring = PLUS_TIMES
 ) -> Assoc:

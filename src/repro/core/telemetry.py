@@ -50,6 +50,9 @@ _MERGE_SUM_FIELDS = (
     "malformed",
     "source_records",
     "n_instances",
+    # query-plane counters (PR 9): additive across a fleet like the rest
+    "views_published",
+    "queries_served",
 )
 
 
@@ -119,6 +122,14 @@ class TelemetrySnapshot:
     ingest_rate: Optional[float] = None
     checkpoints: Optional[List[Dict[str, int]]] = None
     drained: Optional[bool] = None
+    # query-plane counters (serve loop, host side).  view_staleness_records
+    # is the staleness contract's number: source records the live head has
+    # folded beyond the latest published view (0 right after a publish,
+    # grows until the next boundary; None when publication is off).
+    views_published: Optional[int] = None
+    queries_served: Optional[int] = None
+    view_seq: Optional[int] = None
+    view_staleness_records: Optional[int] = None
     # nested state snapshot (ServeReport.telemetry["session"])
     session: Optional["TelemetrySnapshot"] = None
     # producer-specific extension point

@@ -46,6 +46,7 @@ from .config import CapacityPlan, ServeConfig, StreamConfig
 from .session import (
     D4MStream,
     QueryNamespace,
+    StreamView,
     build_update_step,
     scan_ingest,
     scan_ingest_and_snapshot,
@@ -63,6 +64,7 @@ __all__ = [
     "Semiring",
     "ServeConfig",
     "StreamConfig",
+    "StreamView",
     "build_update_step",
     "cap_policy",
     "current_policy",

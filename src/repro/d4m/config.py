@@ -62,6 +62,20 @@ class ServeConfig:
       timeout and the stale-batch flush cadence.
     * ``drain_timeout_s`` — bound on the graceful drain (flush + feed the
       residue + device sync) at shutdown.
+    * ``publish_every`` — publish an immutable
+      :class:`~repro.d4m.session.StreamView` every N fed microbatches (the
+      online query plane's snapshot-isolation boundary); ``None`` (default)
+      disables publication and the query plane entirely — zero overhead on
+      the ingest path.  A final view is always published at drain when
+      enabled.
+    * ``publish_cap`` — snapshot capacity for published views (``None``
+      means the plan's ``snapshot_cap``).
+    * ``track_degrees`` — maintain out/in degree vectors incrementally per
+      fed microbatch (host side, off the device path) and seed each
+      published view's degree cache with them, so ``degrees``/``top_k``
+      queries are O(1) reductions-free reads instead of full-snapshot
+      reductions.  Only meaningful with ``publish_every``; automatically
+      skipped for semirings without a host-side fold.
     * ``faults`` — an optional :class:`repro.faults.FaultPlan` consulted at
       the compiled injection sites (chaos tests only; ``None`` keeps every
       site a single ``is not None`` check).  When unset, the serve loop
@@ -76,6 +90,9 @@ class ServeConfig:
     checkpoint_every: int | None = None
     poll_interval_s: float = 0.005
     drain_timeout_s: float = 60.0
+    publish_every: int | None = None
+    publish_cap: int | None = None
+    track_degrees: bool = True
     faults: Any = None  # Optional[repro.faults.FaultPlan]
 
     def validate(self) -> "ServeConfig":
@@ -103,6 +120,19 @@ class ServeConfig:
                 "source stream, which the 'drop' policy breaks (a restore "
                 "would double-feed the post-drop tail and never replay the "
                 "dropped batches)"
+            )
+        if self.publish_every is not None and self.publish_every < 1:
+            raise ValueError(
+                f"publish_every must be >= 1, got {self.publish_every}"
+            )
+        if self.publish_cap is not None and self.publish_cap < 1:
+            raise ValueError(
+                f"publish_cap must be >= 1, got {self.publish_cap}"
+            )
+        if self.publish_cap is not None and self.publish_every is None:
+            raise ValueError(
+                "publish_cap is set but publish_every is None — views are "
+                "never published; set publish_every to enable the query plane"
             )
         if self.poll_interval_s <= 0:
             raise ValueError(

@@ -30,6 +30,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
+import warnings
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -166,39 +168,83 @@ def scan_ingest_and_snapshot(
     return h2, snap, trace
 
 
+# jitted snapshot programs (static cap/semiring).  Eagerly-dispatched
+# snapshots re-interpret the whole merge pipeline per call — tens of
+# seconds at real capacities, which the query plane's per-publish snapshot
+# cannot afford; one compile per (cap, engine shape) amortizes to
+# milliseconds.
+@functools.partial(jax.jit, static_argnames=("cap", "sr"))
+def _snapshot_single(h: HierAssoc, cap: int, sr: Semiring) -> Assoc:
+    return hierarchical.snapshot(h, cap=cap, sr=sr)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "sr", "merge"))
+def _snapshot_packed(h: HierAssoc, cap: int, sr: Semiring, merge: bool):
+    per = multistream.snapshot_packed(h, cap=cap, sr=sr)
+    return multistream.merge_snapshots(per, cap=cap, sr=sr) if merge else per
+
+
 # ---------------------------------------------------------------------------
-# the query namespace: analytics with caps auto-derived from the plan
+# the read side: immutable published views + the bound query namespace
 # ---------------------------------------------------------------------------
 
-class QueryNamespace:
-    """Bound analytics over the session's current snapshot.
+@dataclasses.dataclass(frozen=True)
+class StreamView:
+    """One immutable, owned read view of a streaming session.
 
-    Every method snapshots lazily (cached until the next update) and fills
-    capacity arguments from the session's :class:`CapacityPlan`, so the
-    paper's analyses are one-liners: ``sess.query.top_k(10)``,
-    ``sess.query.triangles()``, ``sess.query.jaccard(u, v)``.
+    A view is the query plane's unit of snapshot isolation: the session
+    (or the serve loop, at microbatch boundaries) *publishes* a view, and
+    every query against it answers over exactly the records folded in at
+    publication time — concurrent ingest never blocks on a reader and a
+    reader never tears a half-applied microbatch.  ``snap`` holds fresh
+    buffers produced by the snapshot computation (never aliases of the
+    donated engine state), so a view stays valid indefinitely, across any
+    number of later updates, restores or resets.
+
+    * ``seq`` — publication sequence number (monotone per session; an
+      unpublished library-mode view reports the latest published seq);
+    * ``records`` — source records folded into this view when the publisher
+      knows it (the serve loop's ``records_fed``); ``None`` in library mode,
+      where the session does not meter triples through ``update()``;
+    * ``nnz`` / ``overflowed`` — state counters at publication.
+
+    Degree vectors are cached per capacity on first use — and pre-seeded by
+    the serve loop's incremental :class:`~repro.serve.query.DegreeTracker`
+    — so ``degrees``/``top_k`` never recompute a full reduction per call.
     """
 
-    def __init__(self, session: "D4MStream"):
-        self._s = session
-
-    def _snap(self) -> Assoc:
-        return self._s.snapshot()
+    snap: Assoc
+    sr: Semiring
+    plan: CapacityPlan
+    engine: str
+    seq: int
+    records: Optional[int] = None
+    published_at: float = 0.0
+    nnz: Optional[int] = None
+    overflowed: Optional[bool] = None
+    _degree_cache: Dict[int, Tuple[Assoc, Assoc]] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
 
     def _cap(self, cap: int | None) -> int:
-        return int(cap) if cap is not None else self._s.plan.snapshot_cap
+        return int(cap) if cap is not None else self.plan.snapshot_cap
 
     def degrees(self, cap: int | None = None) -> Tuple[Assoc, Assoc]:
         """(out_degree, in_degree) keyed ``(vertex, 0)``, folded with the
-        session semiring's add."""
-        return analytics.degrees(self._snap(), cap=self._cap(cap), sr=self._s.sr)
+        view semiring's add; cached per capacity (and pre-seeded by the
+        serve loop's incremental tracker)."""
+        cap = self._cap(cap)
+        if cap not in self._degree_cache:
+            self._degree_cache[cap] = analytics.degrees(
+                self.snap, cap=cap, sr=self.sr
+            )
+        return self._degree_cache[cap]
 
     def top_k(self, k: int = 10, by: str = "out") -> Tuple[jax.Array, jax.Array]:
-        """Heaviest-k vertices by out/in degree: ``(ids [k], counts [k])``."""
-        s = self._s
-        reduce = assoc.reduce_rows if by == "out" else assoc.reduce_cols
-        deg = reduce(self._snap(), s.plan.snapshot_cap, s.sr)
-        return analytics.top_k_vertices(deg, k)
+        """Heaviest-k vertices by out/in degree: ``(ids [k], counts [k])``.
+        Reads the cached degree vectors — O(k) on a warm view."""
+        out_deg, in_deg = self.degrees()
+        return analytics.top_k_vertices(out_deg if by == "out" else in_deg, k)
 
     def triangles(
         self, cap_sq: int | None = None, max_fanout: int | None = None
@@ -210,37 +256,124 @@ class QueryNamespace:
         max.plus session's sr.one = 0.0 would annihilate every product).
         """
         und = analytics.undirected_view(
-            self._snap(), cap=2 * self._s.plan.snapshot_cap, sr=PLUS_TIMES
+            self.snap, cap=2 * self.plan.snapshot_cap, sr=PLUS_TIMES
         )
         return analytics.triangle_count(
             und,
-            cap_sq=cap_sq if cap_sq is not None else 4 * self._s.plan.snapshot_cap,
-            max_fanout=max_fanout if max_fanout is not None else self._s.plan.max_fanout,
+            cap_sq=cap_sq if cap_sq is not None else 4 * self.plan.snapshot_cap,
+            max_fanout=max_fanout if max_fanout is not None else self.plan.max_fanout,
         )
 
     def common_neighbors(self, u: int, v: int, cap: int | None = None) -> jax.Array:
-        return analytics.common_neighbors(self._snap(), u, v, cap=self._cap(cap))
+        return analytics.common_neighbors(self.snap, u, v, cap=self._cap(cap))
 
     def jaccard(self, u: int, v: int, cap: int | None = None) -> jax.Array:
-        return analytics.jaccard(self._snap(), u, v, cap=self._cap(cap))
+        return analytics.jaccard(self.snap, u, v, cap=self._cap(cap))
 
     def reachable_within(
         self, steps: int, cap: int | None = None, max_fanout: int | None = None
     ) -> Assoc:
         return analytics.reachable_within(
-            self._snap(),
+            self.snap,
             steps,
             cap=self._cap(cap),
-            max_fanout=max_fanout if max_fanout is not None else self._s.plan.max_fanout,
+            max_fanout=max_fanout if max_fanout is not None else self.plan.max_fanout,
         )
 
     def row(self, r: int, cap: int | None = None) -> Assoc:
         """Row slice ``A(r, :)`` — Fig. 1's nearest-neighbours query."""
-        return assoc.extract_row(self._snap(), r, cap=self._cap(cap), sr=self._s.sr)
+        return assoc.extract_row(self.snap, r, cap=self._cap(cap), sr=self.sr)
 
     def get(self, r, c) -> jax.Array:
         """Point query ``A(r, c)``."""
-        return assoc.get(self._snap(), r, c, sr=self._s.sr)
+        return assoc.get(self.snap, r, c, sr=self.sr)
+
+    def stats(self) -> Dict[str, Any]:
+        """Publication metadata as a JSON-ready dict (the ``stats`` wire op)."""
+        return {
+            "seq": int(self.seq),
+            "records": None if self.records is None else int(self.records),
+            "engine": self.engine,
+            "nnz": None if self.nnz is None else int(self.nnz),
+            "overflowed": None if self.overflowed is None else bool(self.overflowed),
+            "published_at": float(self.published_at),
+        }
+
+
+class QueryNamespace:
+    """Bound analytics over the session's *current read view*.
+
+    Every method binds to a :class:`StreamView` and fills capacity
+    arguments from the session's :class:`CapacityPlan`, so the paper's
+    analyses are one-liners: ``sess.query.top_k(10)``,
+    ``sess.query.triangles()``, ``sess.query.jaccard(u, v)``.
+
+    Binding: while a serve loop is active the namespace answers over the
+    *latest published view* — snapshot-isolated, never touching the donated
+    device state the feed loop is mutating.  Outside a serve it answers
+    over a lazily-built view of the live state (cached until the next
+    update, as before).  Querying live state *during* a serve that
+    publishes no views falls back to the old direct snapshot with a
+    ``DeprecationWarning``: that read races the update path and will be
+    removed — turn on ``ServeConfig.publish_every`` and use the view API.
+    """
+
+    def __init__(self, session: "D4MStream"):
+        self._s = session
+
+    def _resolve(self) -> StreamView:
+        s = self._s
+        if s._serving:
+            v = s.latest_view()
+            if v is not None:
+                return v
+            warnings.warn(
+                "querying live mutable session state during an active serve "
+                "is deprecated (the read races the donated update path): set "
+                "ServeConfig.publish_every to publish snapshot-isolated "
+                "views and bind through D4MStream.view()/latest_view()",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+        return s._current_view()
+
+    def _snap(self) -> Assoc:
+        return self._resolve().snap
+
+    def degrees(self, cap: int | None = None) -> Tuple[Assoc, Assoc]:
+        """(out_degree, in_degree) keyed ``(vertex, 0)``, folded with the
+        session semiring's add."""
+        return self._resolve().degrees(cap)
+
+    def top_k(self, k: int = 10, by: str = "out") -> Tuple[jax.Array, jax.Array]:
+        """Heaviest-k vertices by out/in degree: ``(ids [k], counts [k])``."""
+        return self._resolve().top_k(k, by)
+
+    def triangles(
+        self, cap_sq: int | None = None, max_fanout: int | None = None
+    ) -> jax.Array:
+        """Triangle count of the undirected support — see
+        :meth:`StreamView.triangles`."""
+        return self._resolve().triangles(cap_sq, max_fanout)
+
+    def common_neighbors(self, u: int, v: int, cap: int | None = None) -> jax.Array:
+        return self._resolve().common_neighbors(u, v, cap)
+
+    def jaccard(self, u: int, v: int, cap: int | None = None) -> jax.Array:
+        return self._resolve().jaccard(u, v, cap)
+
+    def reachable_within(
+        self, steps: int, cap: int | None = None, max_fanout: int | None = None
+    ) -> Assoc:
+        return self._resolve().reachable_within(steps, cap, max_fanout)
+
+    def row(self, r: int, cap: int | None = None) -> Assoc:
+        """Row slice ``A(r, :)`` — Fig. 1's nearest-neighbours query."""
+        return self._resolve().row(r, cap)
+
+    def get(self, r, c) -> jax.Array:
+        """Point query ``A(r, c)``."""
+        return self._resolve().get(r, c)
 
 
 # ---------------------------------------------------------------------------
@@ -283,6 +416,12 @@ class D4MStream:
         self._mgr = None
         self._snap_cache: Dict[Tuple[int, bool], Assoc] = {}
         self._query: Optional[QueryNamespace] = None
+        # the query plane's read side: published immutable views + the
+        # library-mode live view (invalidated on every mutation)
+        self._view_seq = 0
+        self._published_view: Optional[StreamView] = None
+        self._live_view: Optional[StreamView] = None
+        self._serving = False  # set by D4MServer while its feed loop owns state
 
         if mesh is not None:
             self.kind = "mesh"
@@ -416,7 +555,7 @@ class D4MStream:
     def reset(self) -> "D4MStream":
         """Fresh empty state (same compiled update functions)."""
         self.state = self._init_state()
-        self._snap_cache.clear()
+        self._invalidate()
         return self
 
     @property
@@ -433,7 +572,7 @@ class D4MStream:
         State is donated — the previous ``self.state`` buffers are consumed.
         """
         self.state = self._step(self.state, rows, cols, vals)
-        self._snap_cache.clear()
+        self._invalidate()
         return self
 
     def ingest(self, rows, cols, vals):
@@ -449,7 +588,7 @@ class D4MStream:
             self.update(br, bc, bv)
             return dropped
         self.state, dropped = self.engine.ingest(self.state, rows, cols, vals)
-        self._snap_cache.clear()
+        self._invalidate()
         return dropped
 
     def ingest_stream(self, rows, cols, vals) -> jax.Array:
@@ -486,14 +625,14 @@ class D4MStream:
                 return nxt, multistream.nnz_per_instance(nxt)
 
             self.state, trace = lax.scan(body, self.state, (rows, cols, vals))
-            self._snap_cache.clear()
+            self._invalidate()
             return trace
         instances = None if self.kind == "single" else self.n_instances
         self.state, trace = scan_ingest(
             self.state, rows, cols, vals, self.cuts, self.sr,
             instances=instances, branchless=self.config.branchless,
         )
-        self._snap_cache.clear()
+        self._invalidate()
         return trace
 
     def shard_stream(self, rows, cols, vals):
@@ -528,11 +667,11 @@ class D4MStream:
         if self.kind == "single":
             if per_instance:
                 raise ValueError("single-instance session has no per-instance axis")
-            snap = hierarchical.snapshot(self.state, cap=cap, sr=self.sr)
+            snap = _snapshot_single(self.state, cap, self.sr)
         elif self.kind in ("packed", "pallas"):
-            snap = multistream.snapshot_packed(self.state, cap=cap, sr=self.sr)
-            if not per_instance:
-                snap = multistream.merge_snapshots(snap, cap=cap, sr=self.sr)
+            snap = _snapshot_packed(
+                self.state, cap, self.sr, merge=not per_instance
+            )
         else:
             snap = (
                 self.engine.snapshot(self.state, cap)
@@ -553,6 +692,71 @@ class D4MStream:
             )
         self._snap_cache[key] = snap
         return snap
+
+    def _invalidate(self) -> None:
+        """Every mutation path lands here: drop the cached snapshots and the
+        library-mode live view.  Published views are deliberately NOT
+        dropped — they are owned, immutable reads that stay answerable
+        until the next publication replaces them."""
+        self._snap_cache.clear()
+        self._live_view = None
+
+    def view(
+        self,
+        cap: int | None = None,
+        *,
+        records: int | None = None,
+        degrees: Tuple[Assoc, Assoc] | None = None,
+        publish: bool = True,
+    ) -> StreamView:
+        """Materialize an owned, immutable :class:`StreamView` of the
+        current state.
+
+        ``publish=True`` (default) assigns the next view sequence number
+        and makes it the session's :meth:`latest_view` — what the serve
+        loop does at microbatch boundaries, and what :attr:`query` binds
+        to during a serve.  ``records`` stamps the source-record count the
+        publisher has folded in (the staleness reference); ``degrees``
+        pre-seeds the view's degree cache (the serve loop passes its
+        incrementally-maintained vectors so ``top_k``/``degrees`` never
+        re-reduce).
+
+        The view's buffers are snapshot outputs — fresh arrays, never
+        aliases of the donated engine state — so it remains valid across
+        any later updates, restores, or resets (the same ownership rule
+        checkpoints follow).
+        """
+        seq = self._view_seq + 1 if publish else self._view_seq
+        v = StreamView(
+            snap=self.snapshot(cap),
+            sr=self.sr,
+            plan=self.plan,
+            engine=self.kind,
+            seq=seq,
+            records=None if records is None else int(records),
+            published_at=time.monotonic(),
+            nnz=self.nnz(),
+            overflowed=self.overflowed(),
+        )
+        if degrees is not None:
+            v._degree_cache[v._cap(cap)] = degrees
+        if publish:
+            self._view_seq = seq
+            self._published_view = v
+        return v
+
+    def latest_view(self) -> Optional[StreamView]:
+        """The most recently *published* view (``None`` before the first
+        publication).  Safe to read from any thread — publication swaps a
+        single reference."""
+        return self._published_view
+
+    def _current_view(self) -> StreamView:
+        """Library-mode read view: lazily built over the cached live
+        snapshot, invalidated by the next mutation (NOT published)."""
+        if self._live_view is None:
+            self._live_view = self.view(publish=False)
+        return self._live_view
 
     def nnz(self) -> int:
         """Total distinct-key upper bound across all instances."""
@@ -681,7 +885,7 @@ class D4MStream:
         else:
             state = jax.tree.map(lambda x: jnp.array(x, copy=True), state)
         self.state = state
-        self._snap_cache.clear()
+        self._invalidate()
         return extra
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic

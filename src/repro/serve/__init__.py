@@ -28,14 +28,21 @@ For manual control (live telemetry, mid-stream stop) drive the
 """
 from repro.d4m.config import ServeConfig  # noqa: F401  (re-export)
 
+from .query import DegreeTracker, QueryClient, QueryExecutor
 from .router import DRAIN, MicrobatchRouter, instance_of_numpy, route_numpy
 from .server import D4MServer, ServeReport
 from .sources import ArraySource, FileTailSource, RMATSource, Source, TCPSource
 from .wire import (
+    PROTOCOL_VERSION,
+    QueryReply,
+    QueryRequest,
     decode_binary,
+    decode_messages,
     decode_text,
     encode,
     encode_binary,
+    encode_reply,
+    encode_request,
     encode_text,
     send_triples,
 )
@@ -44,17 +51,26 @@ __all__ = [
     "ArraySource",
     "D4MServer",
     "DRAIN",
+    "DegreeTracker",
     "FileTailSource",
     "MicrobatchRouter",
+    "PROTOCOL_VERSION",
+    "QueryClient",
+    "QueryExecutor",
+    "QueryReply",
+    "QueryRequest",
     "RMATSource",
     "ServeConfig",
     "ServeReport",
     "Source",
     "TCPSource",
     "decode_binary",
+    "decode_messages",
     "decode_text",
     "encode",
     "encode_binary",
+    "encode_reply",
+    "encode_request",
     "encode_text",
     "instance_of_numpy",
     "route_numpy",

@@ -111,6 +111,24 @@ class D4MServer:
             zero=session.sr.zero,
             val_dtype=np.dtype(session.dtype),
         )
+        # the online query plane (ServeConfig.publish_every): an immutable
+        # StreamView is published at microbatch boundaries; the source's
+        # reader thread answers query frames against it, so one socket
+        # serves inserts and queries without the readers ever touching the
+        # donated device state this feed loop mutates
+        self._publish_every = self.config.publish_every
+        self._tracker = None
+        self._executor = None
+        if self._publish_every is not None:
+            from .query import DegreeTracker, QueryExecutor
+
+            if self.config.track_degrees:
+                tracker = DegreeTracker(session.sr, np.dtype(session.dtype))
+                self._tracker = tracker if tracker.supported else None
+            self._executor = QueryExecutor(session, server=self)
+            if hasattr(self.source, "set_query_handler"):
+                self.source.set_query_handler(self._executor.execute)
+        self.views_published = 0
         self._reader: Optional[threading.Thread] = None
         self._feeder: Optional[threading.Thread] = None
         self._abort = threading.Event()
@@ -130,6 +148,25 @@ class D4MServer:
         if self._started:
             return self
         self._started = True
+        self.session._serving = True
+        if self._tracker is not None and self.session.nnz():
+            # warm start (restored checkpoint / pre-ingested session): the
+            # incremental fold must begin from the existing state's degree
+            # reduction, or every published view would under-count the
+            # records that precede this serve
+            from repro.core import analytics
+
+            self._tracker.seed(
+                *analytics.degrees(
+                    self.session.snapshot(),
+                    cap=self.session.plan.snapshot_cap,
+                    sr=self.session.sr,
+                )
+            )
+        if self._publish_every is not None:
+            # publish the (possibly empty) starting view so queries racing
+            # the first microbatch get a well-defined answer, not an error
+            self._publish()
         self.source.start()
         self._t0 = time.monotonic()
         self._reader = threading.Thread(
@@ -213,6 +250,11 @@ class D4MServer:
                 self.batches_fed += 1
                 self.records_fed += int(live)
                 in_flight = None
+                if self._tracker is not None:
+                    # fold this microbatch's degrees on the host while the
+                    # device chews the dispatched update (rows/cols/vals
+                    # are the routed numpy arrays, PAD-masked inside)
+                    self._tracker.feed(rows, cols, vals)
                 if self._faults is not None:
                     spec = self._faults.fire(
                         "worker.crash_after_n_batches", cursor=self.batches_fed
@@ -225,10 +267,19 @@ class D4MServer:
                 every = self.config.checkpoint_every
                 if every is not None and self.batches_fed % every == 0:
                     self._checkpoint()
+                if (
+                    self._publish_every is not None
+                    and self.batches_fed % self._publish_every == 0
+                ):
+                    self._publish()
             if not self._abort.is_set():
                 self._drained = True
             jax.block_until_ready(self.session.state)
             self._t1 = time.monotonic()
+            if self._publish_every is not None and self._drained:
+                # the drain boundary is a microbatch boundary: publish the
+                # final view so post-drain queries see every fed record
+                self._publish()
             if self.config.checkpoint_every is not None:
                 if self._drained:
                     self._checkpoint(final=True)
@@ -263,6 +314,9 @@ class D4MServer:
                 if not (self._reader is not None and self._reader.is_alive()):
                     break  # reader already gone; nothing more can arrive
         finally:
+            # state is quiescent again: sess.query falls back to library
+            # binding (the published views stay answerable either way)
+            self.session._serving = False
             self._done.set()
 
     def _dispatch(self, rows, cols, vals) -> None:
@@ -271,6 +325,36 @@ class D4MServer:
         if s.kind == "mesh":
             rows, cols, vals = s.shard_stream(rows, cols, vals)
         s.update(rows, cols, vals)
+
+    def _publish(self) -> None:
+        """Publish an immutable StreamView at a microbatch boundary.
+
+        Runs on whichever thread owns the state at that moment (start():
+        the caller; afterwards: only the feed loop between dispatches), so
+        the snapshot program is ordered after every dispatched update and
+        the view holds exactly ``records_fed`` source records.  The
+        tracker's degree vectors are lifted and seeded into the view so
+        degrees/top_k queries never re-reduce the snapshot.
+        """
+        cap = self.config.publish_cap
+        degrees = None
+        if self._tracker is not None:
+            from repro.core import analytics
+
+            out_ids, out_vals, in_ids, in_vals = self._tracker.arrays()
+            degrees = analytics.degrees_from_vectors(
+                out_ids,
+                out_vals,
+                in_ids,
+                in_vals,
+                cap if cap is not None else self.session.plan.snapshot_cap,
+                self.session.sr,
+                self.session.dtype,
+            )
+        self.session.view(
+            cap, records=self.records_fed, degrees=degrees, publish=True
+        )
+        self.views_published += 1
 
     def _checkpoint(self, final: bool = False) -> None:
         # save_async's device->host copy synchronizes every dispatched
@@ -303,7 +387,7 @@ class D4MServer:
         now = self._t1 or time.monotonic()
         wall = max(now - self._t0, 1e-9) if self._t0 is not None else 0.0
         c = self.router.counters()
-        return TelemetrySnapshot(
+        snap = TelemetrySnapshot(
             engine=self.session.kind,
             n_instances=self.session.n_instances,
             records_in=c["records_in"],
@@ -321,6 +405,20 @@ class D4MServer:
             checkpoints=list(self.checkpoints),
             drained=self._drained,
         )
+        if self._publish_every is not None:
+            snap.views_published = self.views_published
+            snap.queries_served = (
+                self._executor.queries_served
+                if self._executor is not None
+                else 0
+            )
+            view = self.session.latest_view()
+            if view is not None:
+                snap.view_seq = int(view.seq)
+                snap.view_staleness_records = max(
+                    0, self.records_fed - int(view.records or 0)
+                )
+        return snap
 
     def report(self) -> ServeReport:
         """Final report; call after :meth:`join`/:meth:`run`/:meth:`stop`.

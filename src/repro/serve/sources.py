@@ -109,6 +109,15 @@ class TCPSource(Source):
         self._listener: Optional[socket.socket] = None
         self.connections_seen = 0
         self.resets_injected = 0
+        self.queries_seen = 0
+        # the online query plane: when the serve loop installs a handler
+        # (``QueryRequest -> QueryReply``), this source speaks the full
+        # op-coded protocol — query frames are answered inline on the same
+        # connection, insert frames flow to chunks() as before.  With no
+        # handler the source stays a v0-compatible insert-only reader
+        # (query frames then count malformed/desync, exactly as before).
+        self._query_handler = None
+        self.reply_timeout_s = 5.0
         # faults: Optional[repro.faults.FaultPlan] — drives the
         # ``source.conn_reset`` site (forcibly drop one live producer
         # connection as if the peer RST it).  The serve loop attaches the
@@ -117,6 +126,12 @@ class TCPSource(Source):
 
     def set_faults(self, faults) -> None:
         self._faults = faults
+
+    def set_query_handler(self, handler) -> None:
+        """Install the query plane: ``handler(QueryRequest) -> QueryReply``.
+        Called by :class:`~repro.serve.server.D4MServer` when view
+        publication is enabled; runs on this source's reader thread."""
+        self._query_handler = handler
 
     def start(self) -> "TCPSource":
         if self._listener is None:
@@ -223,22 +238,84 @@ class TCPSource(Source):
         buf = buffers[conn]
         if final and self.encoding == "text" and buf and not buf.endswith(b"\n"):
             buf += b"\n"  # a last record without its newline is still a record
+        if self._query_handler is None:
+            # insert-only path: byte-identical to the pre-query-plane source
+            try:
+                (r, c, v), leftover, bad = self._decode(buf)
+            except ValueError:
+                self.malformed += 1
+                buffers[conn] = b""
+                return None, False
+            if final and leftover:
+                # a producer died mid-frame: the incomplete tail is lost —
+                # count it so the shortfall is diagnosable from telemetry
+                bad += 1
+                leftover = b""
+            self.malformed += bad
+            buffers[conn] = leftover
+            if r.shape[0] == 0:
+                return None, True
+            return self._count((r, c, v)), True
         try:
-            (r, c, v), leftover, bad = self._decode(buf)
+            messages, leftover, bad = wire.decode_messages(buf, self.encoding)
         except ValueError:
             self.malformed += 1
             buffers[conn] = b""
             return None, False
         if final and leftover:
-            # a producer died mid-frame: the incomplete tail is lost — count
-            # it so the shortfall is diagnosable from telemetry
             bad += 1
             leftover = b""
         self.malformed += bad
         buffers[conn] = leftover
-        if r.shape[0] == 0:
-            return None, True
-        return self._count((r, c, v)), True
+        alive = True
+        triples = []
+        for kind, payload in messages:
+            if kind == "insert":
+                triples.append(payload)
+            elif kind == "query":
+                self.queries_seen += 1
+                if not self._send(conn, wire.encode_reply(
+                    self._answer(payload), self.encoding
+                )):
+                    alive = False  # client gone mid-reply: drop it
+            else:
+                # a REPLY arriving at the server is protocol nonsense —
+                # framing-valid, so skip it like a mangled text line
+                self.malformed += 1
+        if not triples:
+            return None, alive
+        chunk = (
+            np.concatenate([t[0] for t in triples]),
+            np.concatenate([t[1] for t in triples]),
+            np.concatenate([t[2] for t in triples]),
+        )
+        return self._count(chunk), alive
+
+    def _answer(self, request) -> "wire.QueryReply":
+        try:
+            return self._query_handler(request)
+        except Exception as e:  # the executor answers errors; this is a belt
+            return wire.QueryReply(
+                id=request.id, ok=False, error=f"{type(e).__name__}: {e}"
+            )
+
+    def _send(self, conn, data: bytes) -> bool:
+        """Bounded non-blocking sendall for replies: the reader thread must
+        never block forever on one slow query client (that would stall
+        every producer multiplexed on this selector loop)."""
+        deadline = time.monotonic() + self.reply_timeout_s
+        view = memoryview(data)
+        while view:
+            try:
+                sent = conn.send(view)
+                view = view[sent:]
+            except (BlockingIOError, InterruptedError):
+                if time.monotonic() > deadline:
+                    return False
+                time.sleep(0.001)
+            except OSError:
+                return False
+        return True
 
 
 # ---------------------------------------------------------------------------

@@ -1,40 +1,93 @@
-"""Wire formats for triple records ``(row, col, val)`` and a loopback client.
+"""Versioned, op-coded wire protocol for the serve plane + a loopback client.
 
-Two encodings, both newline/frame delimited so they survive arbitrary TCP
-segmentation:
+One protocol, two encodings, three ops.  Every byte on a serve socket is a
+*message* with an **op** — ``insert`` (triple records flowing in), ``query``
+(a typed analytics request) or ``reply`` (its typed response) — so a single
+TCP listener speaks both the ingest path and the online query plane.
 
-* ``"text"`` — D4M's native triple-store form: one ASCII line per record,
-  ``row<TAB>col<TAB>val\\n`` (any whitespace separator is accepted on the
-  read side).  Human-greppable, what the tailing file source reads.
-* ``"binary"`` — framed columnar batches for high-rate feeds: an 8-byte
-  header (magic ``D4MB`` + little-endian uint32 record count) followed by
-  ``count`` int32 rows, ``count`` int32 cols, ``count`` float32 vals.
-  Columnar so both ends move whole numpy arrays without a per-record loop.
+* ``"text"`` — D4M's native triple-store form: one ASCII line per message.
+  Insert lines are ``row<TAB>col<TAB>val\\n`` (any whitespace separator is
+  accepted on the read side; human-greppable, what the tailing file source
+  reads).  Query lines start with ``?`` and reply lines with ``!``, each
+  carrying one JSON object.
+* ``"binary"`` — framed columnar batches for high-rate feeds.  Two frame
+  generations share one decoder:
 
-Decoders are incremental: each returns ``(records, leftover)`` where
+  - **v0** (legacy, insert-only): an 8-byte header (magic ``D4MB`` +
+    little-endian uint32 record count) followed by ``count`` int32 rows,
+    ``count`` int32 cols, ``count`` float32 vals.  v0 frames decode
+    bit-identically to the pre-protocol decoder — they *are* the INSERT op
+    at version 0.
+  - **v1** (op-coded): a 12-byte header ``magic D4MF + version u8 + op u8 +
+    reserved u16 + body_len u32``.  INSERT bodies are ``count u32`` + the
+    same columnar triple layout as v0; QUERY bodies are one JSON object;
+    REPLY bodies are ``json_len u32 + JSON + raw columnar arrays`` (the
+    JSON's ``arrays`` table names each section's dtype and count, so float
+    results round-trip bit-exactly without a text format).
+
+Both encodings share the same containment bounds: ids pass through
+:func:`_ids_i32` (float ids truncate, out-of-int32-range ids raise),
+insert frames are bounded by :data:`MAX_FRAME_RECORDS` and control frames
+by :data:`MAX_CONTROL_BYTES` / the reply array budget — a corrupted length
+field behind a valid magic can never buffer a connection toward OOM.
+
+Decoders are incremental: each returns ``(..., leftover, malformed)`` where
 ``leftover`` is the tail of the buffer that is not yet a complete
-line/frame — callers keep it and prepend the next socket read.
+line/frame — callers keep it and prepend the next socket read.  The
+triple-only entry points (:func:`decode_text` / :func:`decode_binary`)
+remain as compatibility shims over the message decoder for consumers that
+only ingest (file tails, v0 producers).
 """
 from __future__ import annotations
 
+import dataclasses
+import json
 import socket
 import struct
-from typing import Tuple
+from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
 ENCODINGS = ("text", "binary")
 
-BINARY_MAGIC = b"D4MB"
-_HEADER = struct.Struct("<4sI")  # magic, record count
+#: Current op-coded protocol version (the ``version`` byte in v1+ frames).
+#: Version 0 is the implicit version of legacy ``D4MB`` insert frames.
+PROTOCOL_VERSION = 1
+
+BINARY_MAGIC = b"D4MB"  # v0: insert-only columnar frame
+FRAME_MAGIC = b"D4MF"  # v1+: op-coded frame
+_HEADER = struct.Struct("<4sI")  # v0: magic, record count
+_V1_HEADER = struct.Struct("<4sBBHI")  # magic, version, op, reserved, body len
+
+#: Message op codes carried in the v1 frame header (and implied by line
+#: shape in the text encoding: triples / ``?`` / ``!``).
+OP_INSERT = 0x01
+OP_QUERY = 0x02
+OP_REPLY = 0x03
+OP_NAMES = {OP_INSERT: "insert", OP_QUERY: "query", OP_REPLY: "reply"}
 
 # Sanity ceiling on one frame's record count (16M records = 192 MiB body,
 # far above any sane batch).  Without it, a corrupted count field behind a
 # valid magic makes the receiver buffer the connection unboundedly toward
-# OOM "waiting for the frame to complete" instead of dropping it.
+# OOM "waiting for the frame to complete" instead of dropping it.  Shared
+# by v0 frames, v1 INSERT bodies, and the per-array budget of REPLY bodies.
 MAX_FRAME_RECORDS = 1 << 24
 
+#: Ceiling on a QUERY body / a REPLY's JSON section (1 MiB — queries are
+#: small typed requests, not bulk data).  Same OOM containment as
+#: :data:`MAX_FRAME_RECORDS`, applied to the control plane.
+MAX_CONTROL_BYTES = 1 << 20
+
+#: Ceiling on a full REPLY body: the JSON budget plus three result columns
+#: at the insert bound (replies carry at most snapshot-shaped columnar
+#: results, never more than an insert frame may).
+MAX_REPLY_BYTES = MAX_CONTROL_BYTES + 12 * MAX_FRAME_RECORDS
+
 Records = Tuple[np.ndarray, np.ndarray, np.ndarray]  # rows i32, cols i32, vals f32
+
+#: A decoded message: ``("insert", (rows, cols, vals))``,
+#: ``("query", QueryRequest)`` or ``("reply", QueryReply)``.
+Message = Tuple[str, Any]
 
 _I32_MIN = np.iinfo(np.int32).min
 _I32_MAX = np.iinfo(np.int32).max
@@ -62,11 +115,94 @@ def _ids_i32(x, name: str) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# typed request/response messages
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QueryRequest:
+    """One typed analytics request (the QUERY op's payload).
+
+    ``op`` names a query operation the server's executor understands
+    (``degrees`` / ``top_k`` / ``row`` / ``get`` / ``triangles`` /
+    ``stats``); ``args`` carries its keyword arguments; ``id`` is an opaque
+    client correlation id echoed on the reply.
+    """
+
+    op: str
+    args: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    id: int = 0
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"id": int(self.id), "op": str(self.op), "args": dict(self.args)}
+
+    @classmethod
+    def from_json(cls, obj: Mapping[str, Any]) -> "QueryRequest":
+        if not isinstance(obj, Mapping) or not isinstance(obj.get("op"), str):
+            raise ValueError(f"malformed query payload: {obj!r}")
+        args = obj.get("args", {})
+        if not isinstance(args, Mapping):
+            raise ValueError(f"query args must be an object, got {args!r}")
+        return cls(op=obj["op"], args=dict(args), id=int(obj.get("id", 0)))
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryReply:
+    """One typed analytics response (the REPLY op's payload).
+
+    Every reply names the :class:`~repro.d4m.session.StreamView` it was
+    answered against — ``view_seq`` (publication sequence number),
+    ``view_records`` (source records folded into that view) and
+    ``staleness`` (records the live head had ingested beyond the view when
+    the reply was built) — so a client can reason about read isolation
+    without a second round trip.  Results come back as ``scalars`` (plain
+    JSON values) and ``arrays`` (named columnar numpy arrays, bit-exact in
+    both encodings).
+    """
+
+    id: int = 0
+    ok: bool = True
+    error: Optional[str] = None
+    view_seq: Optional[int] = None
+    view_records: Optional[int] = None
+    staleness: Optional[int] = None
+    scalars: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    arrays: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    def _meta(self) -> Dict[str, Any]:
+        return {
+            "id": int(self.id),
+            "ok": bool(self.ok),
+            "error": self.error,
+            "view_seq": self.view_seq,
+            "view_records": self.view_records,
+            "staleness": self.staleness,
+            "scalars": {str(k): v for k, v in self.scalars.items()},
+        }
+
+    @classmethod
+    def _from_meta(
+        cls, obj: Mapping[str, Any], arrays: Dict[str, np.ndarray]
+    ) -> "QueryReply":
+        if not isinstance(obj, Mapping) or "ok" not in obj:
+            raise ValueError(f"malformed reply payload: {obj!r}")
+        return cls(
+            id=int(obj.get("id", 0)),
+            ok=bool(obj["ok"]),
+            error=obj.get("error"),
+            view_seq=obj.get("view_seq"),
+            view_records=obj.get("view_records"),
+            staleness=obj.get("staleness"),
+            scalars=dict(obj.get("scalars", {})),
+            arrays=arrays,
+        )
+
+
+# ---------------------------------------------------------------------------
 # text encoding
 # ---------------------------------------------------------------------------
 
 def encode_text(rows, cols, vals) -> bytes:
-    """Serialize triples as newline-delimited ``row\\tcol\\tval`` lines.
+    """Serialize insert triples as newline-delimited ``row\\tcol\\tval`` lines.
 
     Values are written with 9 significant digits, which round-trips any
     float32 exactly — ``decode_text(encode_text(...))`` is value-preserving
@@ -85,27 +221,17 @@ def encode_text(rows, cols, vals) -> bytes:
     return "".join(out).encode("ascii")
 
 
-def decode_text(buf: bytes) -> Tuple[Records, bytes, int]:
-    """Parse every complete line in ``buf``.
+def _parse_text_triples(parts: List[List[bytes]]) -> Tuple[Records, int]:
+    """Parse pre-split triple lines (each a list of whitespace fields).
 
-    Returns ``((rows, cols, vals), leftover, malformed)`` — ``leftover`` is
-    the trailing partial line, ``malformed`` counts lines that did not parse
-    as three numeric fields with int32-range ids (skipped, never fatal: one
-    bad record must not poison a long-lived feed).
+    Returns ``(records, malformed)`` — ``malformed`` counts lines that did
+    not parse as three numeric fields with int32-range ids (skipped, never
+    fatal: one bad record must not poison a long-lived feed).
     """
-    cut = buf.rfind(b"\n")
-    if cut < 0:
-        return _empty(), buf, 0
-    block, leftover = buf[: cut + 1], buf[cut + 1 :]
-    # framing is validated PER LINE, always: a flat block.split() could
-    # re-frame a short line's fields into the next record (e.g.
-    # "1\t2\n3\t4\t5\t6\n" is two malformed lines, not two records).
-    # Only the numeric conversion is vectorized.
-    parts = [p for p in (ln.split() for ln in block.splitlines()) if p]
     good = [p for p in parts if len(p) == 3]
     malformed = len(parts) - len(good)
     if not good:
-        return _empty(), leftover, malformed
+        return _empty(), malformed
     try:
         flat = np.array([t for p in good for t in p])
         # ids parse through int64 with an EXPLICIT range check: numpy 1.x
@@ -125,7 +251,6 @@ def decode_text(buf: bytes) -> Tuple[Records, bytes, int]:
                 c64.astype(np.int32),
                 flat[2::3].astype(np.float32),
             ),
-            leftover,
             malformed,
         )
     except (ValueError, OverflowError):
@@ -150,21 +275,100 @@ def decode_text(buf: bytes) -> Tuple[Records, bytes, int]:
             np.asarray(cols, np.int32),
             np.asarray(vals, np.float32),
         ),
-        leftover,
         malformed,
     )
+
+
+def decode_text(buf: bytes) -> Tuple[Records, bytes, int]:
+    """Parse every complete insert line in ``buf`` (triple-only shim).
+
+    Returns ``((rows, cols, vals), leftover, malformed)`` — ``leftover`` is
+    the trailing partial line.  Control lines (``?``/``!``) count as
+    malformed here, exactly like any other non-triple line: this is the
+    v0-compatible read path for sources that only ingest.
+    """
+    cut = buf.rfind(b"\n")
+    if cut < 0:
+        return _empty(), buf, 0
+    block, leftover = buf[: cut + 1], buf[cut + 1 :]
+    # framing is validated PER LINE, always: a flat block.split() could
+    # re-frame a short line's fields into the next record (e.g.
+    # "1\t2\n3\t4\t5\t6\n" is two malformed lines, not two records).
+    # Only the numeric conversion is vectorized.
+    parts = [p for p in (ln.split() for ln in block.splitlines()) if p]
+    records, malformed = _parse_text_triples(parts)
+    return records, leftover, malformed
+
+
+def _decode_text_messages(buf: bytes) -> Tuple[List[Message], bytes, int]:
+    cut = buf.rfind(b"\n")
+    if cut < 0:
+        return [], buf, 0
+    block, leftover = buf[: cut + 1], buf[cut + 1 :]
+    messages: List[Message] = []
+    malformed = 0
+    pending: List[List[bytes]] = []  # contiguous triple lines, batched
+
+    def flush_triples() -> None:
+        nonlocal malformed
+        if not pending:
+            return
+        records, bad = _parse_text_triples(pending)
+        malformed += bad
+        pending.clear()
+        if records[0].shape[0]:
+            messages.append(("insert", records))
+
+    for ln in block.splitlines():
+        stripped = ln.strip()
+        if not stripped:
+            continue
+        kind = stripped[:1]
+        if kind not in (b"?", b"!"):
+            pending.append(ln.split())
+            continue
+        flush_triples()
+        if len(stripped) > MAX_CONTROL_BYTES:
+            malformed += 1
+            continue
+        try:
+            obj = json.loads(stripped[1:].decode("utf-8"))
+            if kind == b"?":
+                messages.append(("query", QueryRequest.from_json(obj)))
+            else:
+                arrays = _arrays_from_json(obj.pop("arrays", {}))
+                messages.append(("reply", QueryReply._from_meta(obj, arrays)))
+        except (ValueError, UnicodeDecodeError):
+            malformed += 1
+    flush_triples()
+    return messages, leftover, malformed
+
+
+def _arrays_to_json(arrays: Dict[str, np.ndarray]) -> Dict[str, Any]:
+    out = {}
+    for name, a in arrays.items():
+        a = np.asarray(a)
+        out[str(name)] = {"dtype": str(a.dtype), "data": a.ravel().tolist()}
+    return out
+
+
+def _arrays_from_json(obj: Mapping[str, Any]) -> Dict[str, np.ndarray]:
+    if not isinstance(obj, Mapping):
+        raise ValueError(f"reply arrays must be an object, got {obj!r}")
+    out = {}
+    for name, spec in obj.items():
+        # float32 survives the JSON round trip bit-exactly: float32->double
+        # is exact, json repr round-trips the double, and the astype back
+        # to float32 is exact again
+        out[str(name)] = np.asarray(spec["data"], np.dtype(spec["dtype"]))
+    return out
 
 
 # ---------------------------------------------------------------------------
 # binary encoding
 # ---------------------------------------------------------------------------
 
-def encode_binary(rows, cols, vals) -> bytes:
-    """Framed columnar batch(es) (see module docstring for the layout).
-
-    Batches beyond :data:`MAX_FRAME_RECORDS` are split into multiple
-    frames, so the encoder can never emit a frame its own decoder rejects
-    as desynchronized."""
+def _insert_body(rows, cols, vals) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     rows = _ids_i32(rows, "row")
     cols = _ids_i32(cols, "col")
     vals = np.ascontiguousarray(np.asarray(vals).ravel(), np.float32)
@@ -172,56 +376,273 @@ def encode_binary(rows, cols, vals) -> bytes:
         raise ValueError(
             f"triple columns disagree: {rows.shape} {cols.shape} {vals.shape}"
         )
+    return rows, cols, vals
+
+
+def encode_binary(rows, cols, vals, version: int = 0) -> bytes:
+    """Framed columnar insert batch(es) — the INSERT op.
+
+    ``version=0`` (default) emits legacy ``D4MB`` frames — what
+    :func:`send_triples` puts on the wire, so any v0 receiver keeps
+    working; ``version=1`` emits op-coded ``D4MF`` INSERT frames.  Both
+    decode identically.  Batches beyond :data:`MAX_FRAME_RECORDS` are
+    split into multiple frames, so the encoder can never emit a frame its
+    own decoder rejects as desynchronized.
+    """
+    if version not in (0, PROTOCOL_VERSION):
+        raise ValueError(f"unknown insert frame version {version}")
+    rows, cols, vals = _insert_body(rows, cols, vals)
     if rows.shape[0] > MAX_FRAME_RECORDS:
         return b"".join(
             encode_binary(
                 rows[i : i + MAX_FRAME_RECORDS],
                 cols[i : i + MAX_FRAME_RECORDS],
                 vals[i : i + MAX_FRAME_RECORDS],
+                version=version,
             )
             for i in range(0, rows.shape[0], MAX_FRAME_RECORDS)
         )
-    header = _HEADER.pack(BINARY_MAGIC, rows.shape[0])
-    return header + rows.tobytes() + cols.tobytes() + vals.tobytes()
+    n = rows.shape[0]
+    payload = rows.tobytes() + cols.tobytes() + vals.tobytes()
+    if version == 0:
+        return _HEADER.pack(BINARY_MAGIC, n) + payload
+    body = struct.pack("<I", n) + payload
+    return (
+        _V1_HEADER.pack(FRAME_MAGIC, PROTOCOL_VERSION, OP_INSERT, 0, len(body))
+        + body
+    )
+
+
+def _frame(op: int, body: bytes) -> bytes:
+    return _V1_HEADER.pack(FRAME_MAGIC, PROTOCOL_VERSION, op, 0, len(body)) + body
+
+
+def encode_request(req: QueryRequest, encoding: str = "binary") -> bytes:
+    """Serialize a :class:`QueryRequest` (the QUERY op)."""
+    payload = json.dumps(req.to_json(), separators=(",", ":")).encode("utf-8")
+    if len(payload) > MAX_CONTROL_BYTES:
+        raise ValueError(
+            f"query payload ({len(payload)} B) exceeds MAX_CONTROL_BYTES"
+        )
+    if encoding == "text":
+        return b"?" + payload + b"\n"
+    if encoding == "binary":
+        return _frame(OP_QUERY, payload)
+    raise ValueError(f"encoding must be one of {ENCODINGS}, got {encoding!r}")
+
+
+def encode_reply(rep: QueryReply, encoding: str = "binary") -> bytes:
+    """Serialize a :class:`QueryReply` (the REPLY op).
+
+    Binary replies carry result arrays as raw columnar sections after the
+    JSON header (bit-exact, no per-element loop); text replies inline them
+    as JSON lists (still bit-exact for int32/float32 — see
+    :func:`_arrays_from_json`).
+    """
+    if encoding == "text":
+        obj = rep._meta()
+        obj["arrays"] = _arrays_to_json(rep.arrays)
+        return b"!" + json.dumps(obj, separators=(",", ":")).encode("utf-8") + b"\n"
+    if encoding != "binary":
+        raise ValueError(f"encoding must be one of {ENCODINGS}, got {encoding!r}")
+    meta = rep._meta()
+    sections = []
+    table = []
+    for name, a in rep.arrays.items():
+        a = np.ascontiguousarray(np.asarray(a).ravel())
+        if a.shape[0] > MAX_FRAME_RECORDS:
+            raise ValueError(
+                f"reply array {name!r} ({a.shape[0]} elements) exceeds "
+                f"MAX_FRAME_RECORDS"
+            )
+        table.append([str(name), str(a.dtype), int(a.shape[0])])
+        sections.append(a.tobytes())
+    meta["arrays"] = table
+    head = json.dumps(meta, separators=(",", ":")).encode("utf-8")
+    if len(head) > MAX_CONTROL_BYTES:
+        raise ValueError(
+            f"reply metadata ({len(head)} B) exceeds MAX_CONTROL_BYTES"
+        )
+    body = struct.pack("<I", len(head)) + head + b"".join(sections)
+    return _frame(OP_REPLY, body)
+
+
+def _parse_v1_body(op: int, body: bytes) -> Tuple[Optional[Message], int]:
+    """Parse one complete v1 frame body.  Returns ``(message, malformed)``;
+    a framing-valid but semantically bad body is skipped (counted), never
+    fatal — the stream itself is still synchronized."""
+    if op == OP_INSERT:
+        if len(body) < 4:
+            return None, 1
+        (count,) = struct.unpack_from("<I", body, 0)
+        if count > MAX_FRAME_RECORDS or len(body) != 4 + 12 * count:
+            raise ValueError(
+                f"insert body disagrees with its count field (count={count}, "
+                f"body={len(body)} B); binary feed desynchronized"
+            )
+        r = np.frombuffer(body, np.int32, count, 4)
+        c = np.frombuffer(body, np.int32, count, 4 + 4 * count)
+        v = np.frombuffer(body, np.float32, count, 4 + 8 * count)
+        return ("insert", (r, c, v)), 0
+    if op == OP_QUERY:
+        try:
+            return ("query", QueryRequest.from_json(json.loads(body))), 0
+        except (ValueError, UnicodeDecodeError):
+            return None, 1
+    # OP_REPLY
+    try:
+        if len(body) < 4:
+            raise ValueError("short reply body")
+        (jlen,) = struct.unpack_from("<I", body, 0)
+        if jlen > MAX_CONTROL_BYTES or 4 + jlen > len(body):
+            raise ValueError("reply metadata length out of bounds")
+        meta = json.loads(body[4 : 4 + jlen])
+        off = 4 + jlen
+        arrays: Dict[str, np.ndarray] = {}
+        for name, dtype, count in meta.pop("arrays", []):
+            dt = np.dtype(dtype)
+            nbytes = dt.itemsize * int(count)
+            if int(count) > MAX_FRAME_RECORDS or off + nbytes > len(body):
+                raise ValueError("reply array section out of bounds")
+            arrays[str(name)] = np.frombuffer(body, dt, int(count), off)
+            off += nbytes
+        return ("reply", QueryReply._from_meta(meta, arrays)), 0
+    except (ValueError, UnicodeDecodeError, TypeError, KeyError):
+        return None, 1
+
+
+def _v1_body_bound(op: int) -> int:
+    if op == OP_INSERT:
+        return 4 + 12 * MAX_FRAME_RECORDS
+    if op == OP_QUERY:
+        return MAX_CONTROL_BYTES
+    return MAX_REPLY_BYTES
+
+
+def _decode_binary_messages(
+    buf: bytes, insert_only: bool = False
+) -> Tuple[List[Message], bytes, int]:
+    """Walk every complete frame in ``buf`` — v0 ``D4MB`` and v1 ``D4MF``
+    interleave freely on one connection.
+
+    A bad magic, an unknown version/op, or an implausible length field
+    raises ``ValueError`` — unlike one mangled text line, a desynchronized
+    binary stream cannot be resynchronized safely.  Frames fully parsed
+    *before* the bad one are not lost to TCP coalescing: they are returned
+    with the bad frame as ``leftover``, and the next call (which sees the
+    bad header first) raises.  ``insert_only`` makes control frames a
+    desync error too (the triple-only shim cannot answer a query).
+    """
+    messages: List[Message] = []
+    malformed = 0
+    off = 0
+    n = len(buf)
+
+    def fail(reason: str) -> bool:
+        # salvage the good frames; the next call sees this header first
+        if messages:
+            return True
+        raise ValueError(f"{reason} at offset {off}; binary feed desynchronized")
+
+    while n - off >= _HEADER.size:
+        magic = buf[off : off + 4]
+        if magic == BINARY_MAGIC:
+            # v0: the INSERT op at version 0, parsed bit-identically to the
+            # pre-protocol decoder
+            _, count = _HEADER.unpack_from(buf, off)
+            if count > MAX_FRAME_RECORDS:
+                if fail(f"bad frame header (magic={magic!r}, count={count})"):
+                    break
+            body = 12 * count  # 4B row + 4B col + 4B val per record
+            if n - off - _HEADER.size < body:
+                break
+            start = off + _HEADER.size
+            messages.append(
+                (
+                    "insert",
+                    (
+                        np.frombuffer(buf, np.int32, count, start),
+                        np.frombuffer(buf, np.int32, count, start + 4 * count),
+                        np.frombuffer(buf, np.float32, count, start + 8 * count),
+                    ),
+                )
+            )
+            off = start + body
+            continue
+        if magic != FRAME_MAGIC:
+            if fail(f"bad frame header (magic={magic!r})"):
+                break
+        if n - off < _V1_HEADER.size:
+            break
+        _, version, op, _, body_len = _V1_HEADER.unpack_from(buf, off)
+        if (
+            version != PROTOCOL_VERSION
+            or op not in OP_NAMES
+            or body_len > _v1_body_bound(op)
+        ):
+            if fail(
+                f"bad frame header (version={version}, op={op}, "
+                f"body_len={body_len})"
+            ):
+                break
+        if insert_only and op != OP_INSERT:
+            if fail(f"control frame (op={OP_NAMES[op]}) on an insert-only decoder"):
+                break
+        if n - off - _V1_HEADER.size < body_len:
+            break
+        body = buf[off + _V1_HEADER.size : off + _V1_HEADER.size + body_len]
+        try:
+            msg, bad = _parse_v1_body(op, body)
+        except ValueError as e:
+            if fail(str(e)):
+                break
+            raise AssertionError  # fail() always raises or breaks
+        malformed += bad
+        if msg is not None:
+            messages.append(msg)
+        off += _V1_HEADER.size + body_len
+    return messages, buf[off:], malformed
 
 
 def decode_binary(buf: bytes) -> Tuple[Records, bytes, int]:
-    """Parse every complete frame in ``buf``; returns like :func:`decode_text`.
+    """Parse every complete insert frame in ``buf`` (triple-only shim over
+    the op-coded decoder); returns like :func:`decode_text`.
 
-    A bad magic (or an implausible record count — see
-    :data:`MAX_FRAME_RECORDS`) raises ``ValueError`` — unlike one mangled
-    text line, a desynchronized binary stream cannot be resynchronized
-    safely.  Frames fully parsed *before* the bad one are not lost to TCP
-    coalescing: they are returned with the bad frame as ``leftover``, and
-    the next call (which sees the bad header first) raises.
+    Accepts both v0 ``D4MB`` and v1 ``D4MF`` INSERT frames; a control
+    frame (query/reply) is a desync error here — an insert-only consumer
+    has no way to answer it.
     """
-    rows, cols, vals = [], [], []
-    off = 0
-    n = len(buf)
-    while n - off >= _HEADER.size:
-        magic, count = _HEADER.unpack_from(buf, off)
-        if magic != BINARY_MAGIC or count > MAX_FRAME_RECORDS:
-            if rows:
-                break  # salvage the good frames; next call raises
-            raise ValueError(
-                f"bad frame header (magic={magic!r}, count={count}) at "
-                f"offset {off}; binary feed desynchronized"
-            )
-        body = 12 * count  # 4B row + 4B col + 4B val per record
-        if n - off - _HEADER.size < body:
-            break
-        start = off + _HEADER.size
-        rows.append(np.frombuffer(buf, np.int32, count, start))
-        cols.append(np.frombuffer(buf, np.int32, count, start + 4 * count))
-        vals.append(np.frombuffer(buf, np.float32, count, start + 8 * count))
-        off = start + body
-    if not rows:
-        return _empty(), buf[off:], 0
-    return (
-        (np.concatenate(rows), np.concatenate(cols), np.concatenate(vals)),
-        buf[off:],
-        0,
+    messages, leftover, malformed = _decode_binary_messages(
+        buf, insert_only=True
     )
+    if not messages:
+        return _empty(), leftover, malformed
+    triples = [m[1] for m in messages]
+    return (
+        (
+            np.concatenate([t[0] for t in triples]),
+            np.concatenate([t[1] for t in triples]),
+            np.concatenate([t[2] for t in triples]),
+        ),
+        leftover,
+        malformed,
+    )
+
+
+def decode_messages(
+    buf: bytes, encoding: str = "binary"
+) -> Tuple[List[Message], bytes, int]:
+    """Parse every complete message in ``buf`` under the op-coded protocol.
+
+    Returns ``(messages, leftover, malformed)``; each message is
+    ``("insert", (rows, cols, vals))``, ``("query", QueryRequest)`` or
+    ``("reply", QueryReply)``, in arrival order.
+    """
+    if encoding == "text":
+        return _decode_text_messages(buf)
+    if encoding == "binary":
+        return _decode_binary_messages(buf)
+    raise ValueError(f"encoding must be one of {ENCODINGS}, got {encoding!r}")
 
 
 def encode(rows, cols, vals, encoding: str = "text") -> bytes:
