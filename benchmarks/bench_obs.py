@@ -1,0 +1,243 @@
+"""Observability-plane benchmark: what does instrumentation cost?
+
+The obs plane's contract is the repro.faults one: **off means absent**
+(every site compiles down to one ``is not None`` check) and **on means
+cheap** (per-thread shard histograms, no locks on the hot path).  This
+bench puts numbers on both:
+
+* **rate_metrics_off** — baseline: a pre-generated R-MAT stream through
+  the full serve loop (publishing views, so every instrumented stage
+  executes) with ``ServeConfig(metrics=False)``, best of ``repeats``;
+* **rate_metrics_on** — the identical stream and session shape with
+  ``metrics=True``: every dispatch, publish, flush and view build timed
+  into live histograms;
+* the CI-gated verdict ``obs_overhead``: the enabled run must sustain at
+  least ``1 - OVERHEAD_CEILING`` of the disabled rate, the two drained
+  snapshots must be **bit-identical** (instrumentation may not perturb
+  results), and a METRICS scrape over a live D4MF socket must return
+  summaries bit-equal to the in-process registry (the exactness
+  contract, exercised end to end).
+
+Emits ``BENCH_obs.json`` on the ``benchmarks/reporting.py`` schema, so
+the trend gate and perf history track both rates and the verdict.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.reporting import BenchmarkReport
+from repro import d4m, serve
+from repro.obs import hist as obs_hist
+
+OVERHEAD_CEILING = 0.02  # enabled may cost at most 2% of the disabled rate
+
+#: ingest-side histograms a scrape cannot perturb (quiescent after feed)
+_QUIET_HISTS = ("serve.update_dispatch_ns", "serve.publish_ns",
+                "router.flush_ns", "session.view_build_ns")
+
+
+def _config(k: int, batch: int, top: int) -> d4m.StreamConfig:
+    return d4m.StreamConfig(
+        cuts=(2 * batch, 16 * batch),
+        top_capacity=top,
+        batch_size=batch,
+        instances_per_device=k,
+        snapshot_cap=4 * top,
+    )
+
+
+def _workload(batches: int, batch: int, scale: int, seed: int = 0):
+    src = serve.RMATSource(
+        batches * batch, chunk_records=batch, scale=scale, seed=seed,
+        pregenerate=True,
+    )
+    rows, cols, vals = zip(*src.chunks())
+    return np.concatenate(rows), np.concatenate(cols), np.concatenate(vals)
+
+
+def _warmup(sess: d4m.D4MStream, r, c, v, batch: int) -> None:
+    warm = sess.serve(
+        serve.ArraySource(r[: 2 * batch], c[: 2 * batch], v[: 2 * batch],
+                          chunk_records=batch),
+        max_latency_ms=1e9, publish_every=1,
+    )
+    assert warm.drained
+    sess.reset()
+
+
+def _timed_leg(k: int, batch: int, top: int, r, c, v, publish_every: int,
+               metrics: bool, repeats: int):
+    """Best-of-``repeats`` served ingest rate; returns (rate, wall, snap)
+    where snap is the last repeat's drained snapshot triples."""
+    best_rate, best_wall, snap = 0.0, 0.0, None
+    for _ in range(repeats):
+        sess = d4m.D4MStream(_config(k, batch, top))
+        _warmup(sess, r, c, v, batch)
+        src = serve.ArraySource(r, c, v, chunk_records=batch)
+        server = serve.D4MServer(
+            sess, src,
+            d4m.ServeConfig(max_latency_ms=1e9, publish_every=publish_every,
+                            drain_timeout_s=600.0, metrics=metrics),
+        ).start()
+        assert server.join(timeout=600)
+        report = server.report()
+        assert report.drained and report.records_fed == r.shape[0]
+        assert report.records_dropped == 0
+        if report.ingest_rate > best_rate:
+            best_rate, best_wall = report.ingest_rate, report.wall_s
+        s = sess.snapshot()
+        nnz = int(s.nnz)
+        snap = (np.asarray(s.rows)[:nnz].copy(),
+                np.asarray(s.cols)[:nnz].copy(),
+                np.asarray(s.vals)[:nnz].copy())
+    return best_rate, best_wall, snap
+
+
+def _quiesce_hists(server, names, timeout_s: float = 30.0) -> None:
+    """Wait until the named histograms stop changing: the feed thread
+    publishes the view *before* recording its publish/view-build spans, so
+    a scrape issued the instant a covering view appears can race the last
+    ``record()`` calls."""
+    prev = None
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        cur = {n: server.metrics.dump()["histograms"][n] for n in names}
+        if cur == prev:
+            return
+        prev = cur
+        time.sleep(0.05)
+    raise AssertionError("ingest-side histograms never went quiescent")
+
+
+def _scrape_exact(k: int, batch: int, top: int, r, c, v,
+                  publish_every: int) -> bool:
+    """Serve over a real loopback socket with metrics on, scrape via the
+    METRICS op, and compare the wire summaries to the in-process registry
+    for every quiescent histogram — must be equal integers, bit for bit."""
+    n = r.shape[0]
+    sess = d4m.D4MStream(_config(k, batch, top))
+    _warmup(sess, r, c, v, batch)
+    src = serve.TCPSource(port=0, encoding="binary", linger=False)
+    server = serve.D4MServer(
+        sess, src,
+        d4m.ServeConfig(max_latency_ms=1e9, publish_every=publish_every,
+                        drain_timeout_s=600.0, metrics=True),
+    ).start()
+    exact = True
+    with serve.QueryClient("127.0.0.1", src.port, timeout_s=120.0) as qc:
+        for lo in range(0, n, 4 * batch):
+            qc.insert(r[lo:lo + 4 * batch], c[lo:lo + 4 * batch],
+                      v[lo:lo + 4 * batch])
+        deadline = time.monotonic() + 120
+        while True:
+            rep = qc.request("stats")
+            assert rep.ok
+            if rep.scalars["records"] == n:
+                break
+            assert time.monotonic() < deadline, "stream never fully published"
+            time.sleep(0.01)
+        _quiesce_hists(server, _QUIET_HISTS)
+        rep = qc.metrics()
+        assert rep.ok
+        local = server.metrics.dump()["histograms"]
+        for name in _QUIET_HISTS:
+            st = local[name]
+            if obs_hist.state_count(st) == 0:
+                exact = False
+            if not np.array_equal(rep.arrays[f"hist.{name}.counts"],
+                                  np.asarray(st["counts"], np.int64)):
+                exact = False
+            if rep.scalars["summaries"].get(name) \
+                    != obs_hist.summarize_state(st):
+                exact = False
+    assert server.join(timeout=600)
+    return exact
+
+
+def _bit_identical(a, b) -> bool:
+    return all(np.array_equal(x, y) for x, y in zip(a, b))
+
+
+def main(
+    smoke: bool = False,
+    k: int = 8,
+    batches: int | None = None,
+    batch: int | None = None,
+    scale: int | None = None,
+    publish_every: int | None = None,
+    repeats: int = 3,
+):
+    batches = batches if batches is not None else (60 if smoke else 400)
+    batch = batch if batch is not None else (256 if smoke else 512)
+    scale = scale if scale is not None else (14 if smoke else 18)
+    publish_every = publish_every if publish_every is not None else (
+        6 if smoke else 10
+    )
+    assert batches % publish_every == 0
+    top = int(batches * batch * 1.25)
+    r, c, v = _workload(batches, batch, scale)
+    params = {
+        "k_per_device": k, "batches": batches, "batch": batch,
+        "rmat_scale": scale, "publish_every": publish_every,
+        "repeats": repeats,
+    }
+    report = BenchmarkReport("obs")
+
+    off_rate, off_wall, off_snap = _timed_leg(
+        k, batch, top, r, c, v, publish_every, metrics=False, repeats=repeats
+    )
+    print(f"obs,metrics_off,k={k},rate={off_rate:,.0f}/s,"
+          f"wall_s={off_wall:.3f}", flush=True)
+    report.add("rate_metrics_off", params=params,
+               updates_per_sec=off_rate, wall_s=off_wall)
+
+    on_rate, on_wall, on_snap = _timed_leg(
+        k, batch, top, r, c, v, publish_every, metrics=True, repeats=repeats
+    )
+    overhead = 1.0 - on_rate / off_rate
+    print(f"obs,metrics_on,k={k},rate={on_rate:,.0f}/s,"
+          f"wall_s={on_wall:.3f},overhead={overhead:.4f}", flush=True)
+    report.add("rate_metrics_on", params=params,
+               updates_per_sec=on_rate, wall_s=on_wall,
+               overhead=float(overhead))
+
+    bit = _bit_identical(off_snap, on_snap)
+    exact = _scrape_exact(k, batch, top, r, c, v, publish_every)
+    passed = bool(overhead <= OVERHEAD_CEILING and bit and exact)
+    print(f"verdict,obs_overhead,{passed},k={k},overhead={overhead:.4f},"
+          f"ceiling={OVERHEAD_CEILING},bit_identical={bit},"
+          f"scrape_exact={exact}")
+    report.add(
+        "obs_overhead",
+        params={**params, "ceiling": OVERHEAD_CEILING},
+        passed=passed,
+        overhead=float(overhead),
+        bit_identical=bool(bit),
+        scrape_exact=bool(exact),
+    )
+    report.write()
+    return {"overhead": overhead, "bit_identical": bit, "scrape_exact": exact}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--batches", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--scale", type=int, default=None)
+    ap.add_argument("--publish-every", type=int, default=None)
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+    main(
+        smoke=args.smoke,
+        k=args.k,
+        batches=args.batches,
+        batch=args.batch,
+        scale=args.scale,
+        publish_every=args.publish_every,
+        repeats=args.repeats,
+    )

@@ -42,7 +42,7 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 #: the benchmark sections (authoritative; benchmarks/run.py re-exports)
 SECTIONS = (
     "hier", "kernels", "embed", "scaling", "cascade_kernel", "serve", "fleet",
-    "query",
+    "query", "obs",
 )
 
 _SECTION_MODULES = {
@@ -54,6 +54,7 @@ _SECTION_MODULES = {
     "serve": "benchmarks.bench_serve",
     "fleet": "benchmarks.bench_fleet",
     "query": "benchmarks.bench_query",
+    "obs": "benchmarks.bench_obs",
 }
 
 

@@ -130,6 +130,11 @@ class TelemetrySnapshot:
     queries_served: Optional[int] = None
     view_seq: Optional[int] = None
     view_staleness_records: Optional[int] = None
+    # runtime-observability latency distributions (repro.obs): a map of
+    # histogram name -> {"counts": [...], "max_ns": int} bucket states.
+    # None unless the producer ran with metrics enabled; merge() folds
+    # them bucket-wise, so count conservation extends to distributions.
+    histograms: Optional[Dict[str, Any]] = None
     # nested state snapshot (ServeReport.telemetry["session"])
     session: Optional["TelemetrySnapshot"] = None
     # producer-specific extension point
@@ -219,6 +224,12 @@ class TelemetrySnapshot:
         overflowed = [s.overflowed for s in snaps if s.overflowed is not None]
         if overflowed:
             out.overflowed = any(overflowed)
+        hist_maps = [s.histograms for s in snaps if s.histograms]
+        if hist_maps:
+            # core -> obs is acyclic: repro.obs.hist is pure stdlib+numpy
+            from repro.obs.hist import merge_state_maps
+
+            out.histograms = merge_state_maps(hist_maps)
         return out
 
     # -- consumers -----------------------------------------------------------

@@ -81,6 +81,17 @@ class ServeConfig:
       site a single ``is not None`` check).  When unset, the serve loop
       falls back to the ``REPRO_FAULTS`` environment variable so subprocess
       fleet workers inherit the controller's plan.
+    * ``metrics`` — the runtime observability plane (:mod:`repro.obs`):
+      ``True`` arms a per-server :class:`~repro.obs.MetricsRegistry`
+      (per-stage latency histograms, queue gauges, the METRICS wire op),
+      ``False`` forces it off, and ``None`` (default) defers to the
+      ``REPRO_OBS`` environment variable — the same resolution order as
+      ``faults``, so fleet workers inherit the controller's choice.  Off,
+      every instrumentation site is a single ``is not None`` check.
+    * ``profile_dir`` — opt-in ``jax.profiler.trace`` output directory;
+      when set, the served feed loop runs under the profiler so device
+      update steps show up in TensorBoard-compatible traces.  ``None``
+      (default) adds nothing to the loop.
     """
 
     max_batch: int | None = None
@@ -94,6 +105,8 @@ class ServeConfig:
     publish_cap: int | None = None
     track_degrees: bool = True
     faults: Any = None  # Optional[repro.faults.FaultPlan]
+    metrics: bool | None = None
+    profile_dir: str | None = None
 
     def validate(self) -> "ServeConfig":
         if self.max_batch is not None and self.max_batch < 1:
@@ -150,6 +163,15 @@ class ServeConfig:
                     f"faults must be a repro.faults.FaultPlan or None, "
                     f"got {type(self.faults).__name__}"
                 )
+        if self.metrics is not None and not isinstance(self.metrics, bool):
+            raise ValueError(
+                f"metrics must be True, False, or None, got {self.metrics!r}"
+            )
+        if self.profile_dir is not None and not isinstance(self.profile_dir, str):
+            raise ValueError(
+                f"profile_dir must be a string path or None, "
+                f"got {type(self.profile_dir).__name__}"
+            )
         return self
 
     # -- wire form (fleet worker handoff) ------------------------------------

@@ -422,6 +422,7 @@ class D4MStream:
         self._published_view: Optional[StreamView] = None
         self._live_view: Optional[StreamView] = None
         self._serving = False  # set by D4MServer while its feed loop owns state
+        self._obs = None  # view-build histogram handle, set by D4MServer
 
         if mesh is not None:
             self.kind = "mesh"
@@ -727,6 +728,7 @@ class D4MStream:
         checkpoints follow).
         """
         seq = self._view_seq + 1 if publish else self._view_seq
+        _t0 = 0 if self._obs is None else time.perf_counter_ns()
         v = StreamView(
             snap=self.snapshot(cap),
             sr=self.sr,
@@ -738,6 +740,8 @@ class D4MStream:
             nnz=self.nnz(),
             overflowed=self.overflowed(),
         )
+        if self._obs is not None:
+            self._obs.record(time.perf_counter_ns() - _t0)
         if degrees is not None:
             v._degree_cache[v._cap(cap)] = degrees
         if publish:

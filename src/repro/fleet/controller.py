@@ -161,6 +161,7 @@ class WorkerHandle:
         self.snapshot_path: Optional[str] = None
         self.last_ckpt: Optional[Dict[str, Any]] = None  # dir/step/cursor
         self.error: Optional[str] = None
+        self.metrics_dump: Optional[Dict[str, Any]] = None  # latest obs dump
         self.log_path: Optional[str] = None
         self.quarantined = False  # crash-loop breaker tripped; never revived
         self.last_revive_error: Optional[str] = None
@@ -284,6 +285,7 @@ class FleetController:
         faults: Optional[FaultPlan] = None,
         heartbeat_timeout_s: Optional[float] = None,
         connect_retry: Optional[RetryPolicy] = None,
+        metrics: Optional[bool] = None,
     ):
         if n_workers < 1:
             raise ValueError(f"n_workers must be >= 1, got {n_workers}")
@@ -307,6 +309,26 @@ class FleetController:
         # argument wins; otherwise inherit the environment (so a chaos CI
         # job can inject without touching call sites).
         self._faults = faults if faults is not None else FaultPlan.from_env()
+        # Observability: the one-switch fleet enable.  An explicit metrics=
+        # argument wins; otherwise REPRO_OBS (same resolution as the serve
+        # loop).  When the fleet plane is on, it is threaded into the
+        # workers' ServeConfig (unless the caller pinned serve metrics
+        # explicitly), so one flag arms the controller's own registry AND
+        # every worker's — FleetController.metrics() then merges them all.
+        from repro.obs import MetricsRegistry
+
+        if metrics is not None:
+            self._metrics = MetricsRegistry() if metrics else None
+        else:
+            self._metrics = MetricsRegistry.from_env()
+        if self._metrics is not None and self.serve_config.metrics is None:
+            self.serve_config = dataclasses.replace(
+                self.serve_config, metrics=True
+            )
+        self._h_push = (
+            None if self._metrics is None
+            else self._metrics.histogram("fleet.push_ns")
+        )
         # Liveness: socket errors catch dead workers; the heartbeat deadline
         # catches HUNG-but-connected ones (no control-plane message for
         # longer than the timeout).  The deadline arms per incarnation at
@@ -504,6 +526,8 @@ class FleetController:
                     h.hello_event.set()
                 elif kind == "telemetry":
                     h.telemetry = _tel_from_json(msg["telemetry"])
+                    if msg.get("metrics") is not None:
+                        h.metrics_dump = msg["metrics"]
                 elif kind == "checkpoint":
                     with self._lock:
                         h.last_ckpt = {
@@ -515,6 +539,8 @@ class FleetController:
                 elif kind == "report":
                     h.report = _tel_from_json(msg["telemetry"])
                     h.telemetry = h.report
+                    if msg.get("metrics") is not None:
+                        h.metrics_dump = msg["metrics"]
                     h.report_cursor = int(msg["cursor"])
                     h.snapshot_path = msg.get("snapshot_path")
                     h.report_event.set()
@@ -541,6 +567,17 @@ class FleetController:
         recover.  Parts owned by a quarantined worker are journaled but not
         sent — they become the report's exact ``records_quarantined``.
         """
+        if self._h_push is None:
+            self._push_impl(rows, cols, vals)
+            return
+        t0 = time.perf_counter_ns()
+        try:
+            self._push_impl(rows, cols, vals)
+        finally:
+            self._h_push.record(time.perf_counter_ns() - t0)
+
+    def _push_impl(self, rows, cols, vals) -> None:
+        # route + journal + send for one chunk (push() adds the timing)
         rows = np.asarray(rows, np.int32).ravel()
         cols = np.asarray(cols, np.int32).ravel()
         vals = np.asarray(vals, np.float32).ravel()
@@ -579,6 +616,12 @@ class FleetController:
         heartbeat deadline is configured, hung-but-connected ones (live
         process, open sockets, no control-plane message for longer than
         the timeout)."""
+        if self._metrics is not None and self._hb is not None:
+            now = time.time()
+            for wid, last in self._hb.last.items():
+                self._metrics.gauge(f"fleet.heartbeat_age_s.w{wid}").set(
+                    max(0.0, now - last)
+                )
         for h in self.workers:
             if (
                 not h.quarantined
@@ -762,6 +805,26 @@ class FleetController:
         if not tels:
             return TelemetrySnapshot(engine="fleet")
         return TelemetrySnapshot.merge(tels)
+
+    def metrics(self) -> Optional[Dict[str, Any]]:
+        """The fleet-wide observability view: every worker's latest
+        registry dump (piggybacked on its control-plane telemetry) merged
+        with the controller's own registry.
+
+        Counters and gauges sum; histograms merge bucket-wise, so the
+        fleet distribution conserves every worker's event counts exactly.
+        ``None`` when no registry exists anywhere (observability off).
+        """
+        from repro.obs import MetricsRegistry
+
+        dumps = [
+            h.metrics_dump for h in self.workers if h.metrics_dump is not None
+        ]
+        if self._metrics is not None:
+            dumps.append(self._metrics.dump())
+        if not dumps:
+            return None
+        return MetricsRegistry.merge_dumps(dumps)
 
     def _quarantine_entry(self, h: WorkerHandle) -> Dict[str, Any]:
         """Exact loss accounting for one quarantined slot: every record

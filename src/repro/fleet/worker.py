@@ -193,10 +193,14 @@ def run_worker(worker_id: int, controller: str) -> int:
                 # can tell this apart from a healthy quiet worker
                 while True:
                     time.sleep(3600.0)
-            _send(ctrl, {
+            tel_msg = {
                 "type": "telemetry", "worker": worker_id,
                 "telemetry": server.telemetry().to_json(),
-            }, ctrl_lock)
+            }
+            dump = server.metrics_dump()
+            if dump is not None:
+                tel_msg["metrics"] = dump
+            _send(ctrl, tel_msg, ctrl_lock)
             if ckpt_dir is not None:
                 durable = _latest_durable_checkpoint(ckpt_dir)
                 if durable is not None and durable["step"] > last_ckpt_step:
@@ -249,12 +253,16 @@ def run_worker(worker_id: int, controller: str) -> int:
                 os.fsync(f.fileno())
             os.replace(tmp, snapshot_path)
         tel = report.telemetry.to_json()
-        _send(ctrl, {
+        report_msg = {
             "type": "report", "worker": worker_id,
             "telemetry": tel,
             "cursor": cursor_base + int(report.records_fed),
             "snapshot_path": snapshot_path,
-        }, ctrl_lock)
+        }
+        dump = server.metrics_dump()
+        if dump is not None:
+            report_msg["metrics"] = dump
+        _send(ctrl, report_msg, ctrl_lock)
         return 0
     except BaseException as e:  # noqa: BLE001 - one report, then die visibly
         if stop_requested.is_set() and isinstance(e, OSError):

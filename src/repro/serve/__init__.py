@@ -41,6 +41,7 @@ from .wire import (
     decode_text,
     encode,
     encode_binary,
+    encode_metrics_request,
     encode_reply,
     encode_request,
     encode_text,
@@ -69,6 +70,7 @@ __all__ = [
     "decode_text",
     "encode",
     "encode_binary",
+    "encode_metrics_request",
     "encode_reply",
     "encode_request",
     "encode_text",

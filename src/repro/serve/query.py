@@ -21,17 +21,21 @@ Three pieces sit behind ``ServeConfig.publish_every``:
 from __future__ import annotations
 
 import socket
+import time
 from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core import analytics
 from repro.core.assoc import PAD
+from repro.obs import hist as obs_hist
 
 from . import wire
 
-#: Query ops the executor understands, mapped over StreamView methods.
-QUERY_OPS = ("degrees", "top_k", "row", "get", "triangles", "stats")
+#: Query ops the executor understands.  All but ``metrics`` map over
+#: StreamView methods; ``metrics`` scrapes the server's live
+#: :class:`~repro.obs.MetricsRegistry` and needs no published view.
+QUERY_OPS = ("degrees", "top_k", "row", "get", "triangles", "stats", "metrics")
 
 
 # ---------------------------------------------------------------------------
@@ -135,8 +139,33 @@ class QueryExecutor:
         self.session = session
         self.server = server  # for head-position staleness, when serving
         self.queries_served = 0  # answered ok (errors are not "served")
+        # per-op latency histograms, pre-resolved once (None when the serve
+        # loop runs without observability — execute() then skips straight
+        # to the untimed path, one `is None` check)
+        reg = getattr(server, "metrics", None)
+        if reg is None:
+            self._op_hists = None
+        else:
+            self._op_hists = {
+                op: reg.histogram(f"query.{op}.latency_ns") for op in QUERY_OPS
+            }
 
     def execute(self, request: "wire.QueryRequest") -> "wire.QueryReply":
+        if self._op_hists is None:
+            return self._execute(request)
+        t0 = time.perf_counter_ns()
+        try:
+            return self._execute(request)
+        finally:
+            h = self._op_hists.get(request.op)
+            if h is not None:
+                h.record(time.perf_counter_ns() - t0)
+
+    def _execute(self, request: "wire.QueryRequest") -> "wire.QueryReply":
+        if request.op == "metrics":
+            # the scrape must answer even before any view is published —
+            # it reads the registry, not the stream
+            return self._metrics_reply(request)
         view = self.session.latest_view()
         if view is None:
             return wire.QueryReply(
@@ -159,6 +188,17 @@ class QueryExecutor:
                 staleness=staleness,
             )
         self.queries_served += 1
+        if request.op == "stats":
+            # freshness + live latency percentiles ride along on stats, so
+            # a wire client sees both without a separate metrics scrape
+            if staleness is not None:
+                scalars["view_staleness_records"] = int(staleness)
+            if self._op_hists is not None:
+                scalars["query_latency"] = {
+                    op: h.summary()
+                    for op, h in self._op_hists.items()
+                    if h.count
+                }
         return wire.QueryReply(
             id=request.id,
             ok=True,
@@ -168,6 +208,54 @@ class QueryExecutor:
             scalars=scalars,
             arrays=arrays,
         )
+
+    def _metrics_reply(self, request: "wire.QueryRequest") -> "wire.QueryReply":
+        reg = getattr(self.server, "metrics", None)
+        if reg is None:
+            return wire.QueryReply(
+                id=request.id,
+                ok=False,
+                error="metrics disabled (enable with ServeConfig(metrics="
+                      "True) or REPRO_OBS=1)",
+            )
+        fmt = str(request.args.get("format", "json"))
+        if fmt == "prometheus":
+            self.queries_served += 1
+            return wire.QueryReply(
+                id=request.id, ok=True, scalars={"text": reg.to_prometheus()}
+            )
+        if fmt != "json":
+            return wire.QueryReply(
+                id=request.id,
+                ok=False,
+                error=f"unknown metrics format {fmt!r} "
+                      f"(known: 'json', 'prometheus')",
+            )
+        # one dump() read feeds BOTH the raw bucket arrays and the summary
+        # percentiles, so the reply is internally consistent and the
+        # integer summaries match what any holder of the same state would
+        # compute (the scrape bit-exactness contract)
+        dump = reg.dump()
+        arrays = {
+            f"hist.{name}.counts": np.asarray(st["counts"], np.int64)
+            for name, st in dump["histograms"].items()
+        }
+        scalars = {
+            "counters": dump["counters"],
+            "gauges": dump["gauges"],
+            "hist_max_ns": {
+                name: int(st["max_ns"])
+                for name, st in dump["histograms"].items()
+            },
+            "summaries": {
+                name: obs_hist.summarize_state(st)
+                for name, st in dump["histograms"].items()
+                if obs_hist.state_count(st)
+            },
+        }
+        self.queries_served += 1
+        return wire.QueryReply(id=request.id, ok=True, scalars=scalars,
+                               arrays=arrays)
 
     def _run(
         self, view, op: str, args: Dict[str, Any]
@@ -239,12 +327,26 @@ class QueryClient:
         self._next_id += 1
         req = wire.QueryRequest(op=op, args=args, id=self._next_id)
         self._sock.sendall(wire.encode_request(req, self.encoding))
+        return self._await_reply(self._next_id)
+
+    def metrics(self, **args) -> "wire.QueryReply":
+        """Scrape the server's live metrics registry over this connection
+        (the METRICS op).  ``format="json"`` (default) returns raw bucket
+        arrays + integer summaries; ``format="prometheus"`` returns the
+        text exposition in ``reply.scalars["text"]``."""
+        self._next_id += 1
+        self._sock.sendall(
+            wire.encode_metrics_request(self._next_id, args, self.encoding)
+        )
+        return self._await_reply(self._next_id)
+
+    def _await_reply(self, want_id: int) -> "wire.QueryReply":
         while True:
             messages, self._buf, _ = wire.decode_messages(
                 self._buf, self.encoding
             )
             for kind, payload in messages:
-                if kind == "reply" and int(payload.id) == self._next_id:
+                if kind == "reply" and int(payload.id) == want_id:
                     return payload
             data = self._sock.recv(1 << 16)
             if not data:

@@ -124,6 +124,7 @@ class MicrobatchRouter:
         backpressure: str = "block",
         zero: float = 0.0,
         val_dtype=np.float32,
+        metrics=None,
     ):
         if n_instances is not None and n_instances < 1:
             raise ValueError(f"n_instances must be >= 1, got {n_instances}")
@@ -158,6 +159,15 @@ class MicrobatchRouter:
         self.routing_dropped = 0  # slot-overflow drops (0 by construction
         #                           while max_batch <= slot_cap)
         self.blocked_events = 0  # producer stalls under the "block" policy
+        # observability (repro.obs): handles are resolved ONCE here, so
+        # every hot-path site below is a single `is not None` check when
+        # metrics are off — the faults-plane zero-overhead contract
+        if metrics is None:
+            self._h_flush = self._h_wait = self._g_depth = None
+        else:
+            self._h_flush = metrics.histogram("router.flush_ns")
+            self._h_wait = metrics.histogram("router.enqueue_wait_ns")
+            self._g_depth = metrics.gauge("router.queue_depth")
 
     # -- producer side -------------------------------------------------------
     def push(self, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray) -> None:
@@ -260,6 +270,16 @@ class MicrobatchRouter:
 
     # -- internals -----------------------------------------------------------
     def _flush_locked(self, partial: bool) -> None:
+        if self._h_flush is None:
+            self._flush_impl(partial)
+            return
+        t0 = time.perf_counter_ns()
+        try:
+            self._flush_impl(partial)
+        finally:
+            self._h_flush.record(time.perf_counter_ns() - t0)
+
+    def _flush_impl(self, partial: bool) -> None:
         take = self.max_batch if not partial else min(self._pend_count, self.max_batch)
         rows = np.full((self.max_batch,), PAD, np.int32)
         cols = np.full((self.max_batch,), PAD, np.int32)
@@ -297,6 +317,13 @@ class MicrobatchRouter:
                 self.dropped_records += int(item[3])
                 return
             self.blocked_events += 1
-            self._q.put(item)  # lossless: stall the producer
+            if self._h_wait is None:
+                self._q.put(item)  # lossless: stall the producer
+            else:
+                t0 = time.perf_counter_ns()
+                self._q.put(item)
+                self._h_wait.record(time.perf_counter_ns() - t0)
         self.batches_out += 1
         self.records_out += int(item[3])
+        if self._g_depth is not None:
+            self._g_depth.set(self._q.qsize())

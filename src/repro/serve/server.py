@@ -89,6 +89,29 @@ class D4MServer:
                 self.source.set_faults(self._faults)
             if session._ckpt_dir is not None:
                 session._manager().set_faults(self._faults)
+        # Observability resolution mirrors faults: explicit config wins
+        # (True arms, False forces off), otherwise the REPRO_OBS environment
+        # variable (how fleet workers inherit the controller's choice).  Off
+        # means every site below holds None and costs one `is not None`.
+        from repro.obs import MetricsRegistry, TraceRing
+
+        if self.config.metrics is not None:
+            self._metrics = MetricsRegistry() if self.config.metrics else None
+        else:
+            self._metrics = MetricsRegistry.from_env()
+        if self._metrics is not None:
+            self._h_dispatch = self._metrics.histogram("serve.update_dispatch_ns")
+            self._h_publish = self._metrics.histogram("serve.publish_ns")
+            self.trace = TraceRing()
+            self._trace_worker = os.environ.get("REPRO_FAULTS_WORKER")
+            if hasattr(self.source, "set_metrics"):
+                self.source.set_metrics(self._metrics)
+            session._obs = self._metrics.histogram("session.view_build_ns")
+        else:
+            self._h_dispatch = self._h_publish = None
+            self.trace = None
+            self._trace_worker = None
+            session._obs = None  # a prior metrics-on serve must not linger
         if (
             self.config.max_batch is not None
             and self.config.max_batch > session.batch_size
@@ -110,6 +133,7 @@ class D4MServer:
             backpressure=self.config.backpressure,
             zero=session.sr.zero,
             val_dtype=np.dtype(session.dtype),
+            metrics=self._metrics,
         )
         # the online query plane (ServeConfig.publish_every): an immutable
         # StreamView is published at microbatch boundaries; the source's
@@ -223,6 +247,12 @@ class D4MServer:
             self.router.close(drain=not self._abort.is_set())
 
     def _feed_loop(self) -> None:
+        from repro.obs import jax_profile
+
+        with jax_profile(self.config.profile_dir):
+            self._feed_loop_impl()
+
+    def _feed_loop_impl(self) -> None:
         in_flight = None  # popped batch not yet counted fed (error account)
         try:
             while True:
@@ -246,7 +276,17 @@ class D4MServer:
                         # fills behind us and the backpressure policy
                         # (block/drop) engages upstream
                         time.sleep(float(spec.args.get("seconds", 0.05)))
-                self._dispatch(rows, cols, vals)
+                if self._h_dispatch is None:
+                    self._dispatch(rows, cols, vals)
+                else:
+                    t0 = time.perf_counter_ns()
+                    self._dispatch(rows, cols, vals)
+                    t1 = time.perf_counter_ns()
+                    self._h_dispatch.record(t1 - t0)
+                    self.trace.append(
+                        "update", t0, t1, batch=int(live),
+                        worker=self._trace_worker,
+                    )
                 self.batches_fed += 1
                 self.records_fed += int(live)
                 in_flight = None
@@ -351,9 +391,21 @@ class D4MServer:
                 self.session.sr,
                 self.session.dtype,
             )
-        self.session.view(
-            cap, records=self.records_fed, degrees=degrees, publish=True
-        )
+        if self._h_publish is None:
+            self.session.view(
+                cap, records=self.records_fed, degrees=degrees, publish=True
+            )
+        else:
+            t0 = time.perf_counter_ns()
+            self.session.view(
+                cap, records=self.records_fed, degrees=degrees, publish=True
+            )
+            t1 = time.perf_counter_ns()
+            self._h_publish.record(t1 - t0)
+            self.trace.append(
+                "publish", t0, t1, records=int(self.records_fed),
+                worker=self._trace_worker,
+            )
         self.views_published += 1
 
     def _checkpoint(self, final: bool = False) -> None:
@@ -418,7 +470,20 @@ class D4MServer:
                 snap.view_staleness_records = max(
                     0, self.records_fed - int(view.records or 0)
                 )
+        if self._metrics is not None:
+            snap.histograms = self._metrics.dump()["histograms"]
         return snap
+
+    @property
+    def metrics(self):
+        """The live :class:`~repro.obs.MetricsRegistry`, or ``None`` when
+        observability is off."""
+        return self._metrics
+
+    def metrics_dump(self) -> Optional[Dict]:
+        """JSON-ready registry dump (``None`` when observability is off) —
+        what a fleet worker piggybacks on its control-channel telemetry."""
+        return None if self._metrics is None else self._metrics.dump()
 
     def report(self) -> ServeReport:
         """Final report; call after :meth:`join`/:meth:`run`/:meth:`stop`.

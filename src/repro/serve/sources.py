@@ -64,6 +64,21 @@ class Source:
     def chunks(self) -> Iterator[Chunk]:  # pragma: no cover - interface
         raise NotImplementedError
 
+    def set_metrics(self, registry) -> None:
+        """Attach an observability registry (``repro.obs.MetricsRegistry``).
+
+        Only decoding sources pay anything: their ``_decode`` callable is
+        wrapped so every decode call lands in the ``wire.decode_ns``
+        histogram.  Called by the serve loop when metrics are on; with
+        ``registry=None`` (or on a non-decoding source) this is a no-op and
+        the bare decoder keeps running — the disabled path stays identical
+        to a build without the obs plane.
+        """
+        if registry is None or not hasattr(self, "_decode"):
+            return
+        record = registry.histogram("wire.decode_ns").record
+        self._decode = wire.timed_decoder(self._decode, record)
+
     def _count(self, chunk: Chunk) -> Chunk:
         self.records_out += int(chunk[0].shape[0])
         return chunk
@@ -103,6 +118,7 @@ class TCPSource(Source):
         self.port = int(port)
         self.encoding = encoding
         self._decode = wire.decoder_for(encoding)
+        self._decode_messages = wire.decode_messages
         self.linger = linger
         self.poll_s = float(poll_s)
         self.recv_bytes = int(recv_bytes)
@@ -126,6 +142,17 @@ class TCPSource(Source):
 
     def set_faults(self, faults) -> None:
         self._faults = faults
+
+    def set_metrics(self, registry) -> None:
+        """Both decode paths (insert-only shim AND the message decoder the
+        query plane uses) feed the same ``wire.decode_ns`` histogram."""
+        if registry is None:
+            return
+        super().set_metrics(registry)
+        record = registry.histogram("wire.decode_ns").record
+        self._decode_messages = wire.timed_decoder(
+            self._decode_messages, record
+        )
 
     def set_query_handler(self, handler) -> None:
         """Install the query plane: ``handler(QueryRequest) -> QueryReply``.
@@ -257,7 +284,7 @@ class TCPSource(Source):
                 return None, True
             return self._count((r, c, v)), True
         try:
-            messages, leftover, bad = wire.decode_messages(buf, self.encoding)
+            messages, leftover, bad = self._decode_messages(buf, self.encoding)
         except ValueError:
             self.malformed += 1
             buffers[conn] = b""

@@ -1,9 +1,11 @@
 """Versioned, op-coded wire protocol for the serve plane + a loopback client.
 
-One protocol, two encodings, three ops.  Every byte on a serve socket is a
+One protocol, two encodings, four ops.  Every byte on a serve socket is a
 *message* with an **op** — ``insert`` (triple records flowing in), ``query``
-(a typed analytics request) or ``reply`` (its typed response) — so a single
-TCP listener speaks both the ingest path and the online query plane.
+(a typed analytics request), ``reply`` (its typed response) or ``metrics``
+(a runtime-observability scrape of the server's live
+:class:`~repro.obs.MetricsRegistry`) — so a single TCP listener speaks the
+ingest path, the online query plane, and the metrics scrape.
 
 * ``"text"`` — D4M's native triple-store form: one ASCII line per message.
   Insert lines are ``row<TAB>col<TAB>val\\n`` (any whitespace separator is
@@ -64,7 +66,13 @@ _V1_HEADER = struct.Struct("<4sBBHI")  # magic, version, op, reserved, body len
 OP_INSERT = 0x01
 OP_QUERY = 0x02
 OP_REPLY = 0x03
-OP_NAMES = {OP_INSERT: "insert", OP_QUERY: "query", OP_REPLY: "reply"}
+OP_METRICS = 0x04
+OP_NAMES = {
+    OP_INSERT: "insert",
+    OP_QUERY: "query",
+    OP_REPLY: "reply",
+    OP_METRICS: "metrics",
+}
 
 # Sanity ceiling on one frame's record count (16M records = 192 MiB body,
 # far above any sane batch).  Without it, a corrupted count field behind a
@@ -431,6 +439,33 @@ def encode_request(req: QueryRequest, encoding: str = "binary") -> bytes:
     raise ValueError(f"encoding must be one of {ENCODINGS}, got {encoding!r}")
 
 
+def encode_metrics_request(
+    id: int = 0,
+    args: Optional[Mapping[str, Any]] = None,
+    encoding: str = "binary",
+) -> bytes:
+    """Serialize a METRICS scrape request.
+
+    Binary emits a dedicated ``OP_METRICS`` frame; text reuses the query
+    line form (``?{"op":"metrics",...}``) since text ops are implied by
+    line shape.  Either way the server sees a ``QueryRequest`` with
+    ``op="metrics"`` and answers with a normal REPLY.
+    """
+    req = QueryRequest(op="metrics", args=dict(args or {}), id=int(id))
+    if encoding == "text":
+        return encode_request(req, "text")
+    if encoding != "binary":
+        raise ValueError(f"encoding must be one of {ENCODINGS}, got {encoding!r}")
+    payload = json.dumps(
+        {"id": int(req.id), "args": dict(req.args)}, separators=(",", ":")
+    ).encode("utf-8")
+    if len(payload) > MAX_CONTROL_BYTES:
+        raise ValueError(
+            f"metrics payload ({len(payload)} B) exceeds MAX_CONTROL_BYTES"
+        )
+    return _frame(OP_METRICS, payload)
+
+
 def encode_reply(rep: QueryReply, encoding: str = "binary") -> bytes:
     """Serialize a :class:`QueryReply` (the REPLY op).
 
@@ -484,9 +519,18 @@ def _parse_v1_body(op: int, body: bytes) -> Tuple[Optional[Message], int]:
         c = np.frombuffer(body, np.int32, count, 4 + 4 * count)
         v = np.frombuffer(body, np.float32, count, 4 + 8 * count)
         return ("insert", (r, c, v)), 0
-    if op == OP_QUERY:
+    if op in (OP_QUERY, OP_METRICS):
+        # A METRICS frame is a QUERY whose op is forced to "metrics": it
+        # reuses the whole query dispatch path (source -> handler ->
+        # executor -> REPLY) while staying distinguishable on the wire.
         try:
-            return ("query", QueryRequest.from_json(json.loads(body))), 0
+            obj = json.loads(body) if body else {}
+            if op == OP_METRICS:
+                if not isinstance(obj, Mapping):
+                    return None, 1
+                obj = dict(obj)
+                obj["op"] = "metrics"
+            return ("query", QueryRequest.from_json(obj)), 0
         except (ValueError, UnicodeDecodeError):
             return None, 1
     # OP_REPLY
@@ -514,7 +558,7 @@ def _parse_v1_body(op: int, body: bytes) -> Tuple[Optional[Message], int]:
 def _v1_body_bound(op: int) -> int:
     if op == OP_INSERT:
         return 4 + 12 * MAX_FRAME_RECORDS
-    if op == OP_QUERY:
+    if op in (OP_QUERY, OP_METRICS):
         return MAX_CONTROL_BYTES
     return MAX_REPLY_BYTES
 
@@ -659,6 +703,23 @@ def decoder_for(encoding: str):
     if encoding == "binary":
         return decode_binary
     raise ValueError(f"encoding must be one of {ENCODINGS}, got {encoding!r}")
+
+
+def timed_decoder(decode, record_ns):
+    """Wrap any decode callable so each call's wall time (perf_counter_ns
+    delta) is fed to ``record_ns`` — how a source instruments its decode
+    path without the decoder itself knowing about metrics.  Only installed
+    when observability is on; the disabled path keeps the bare decoder."""
+    import time
+
+    def timed(*a, **kw):
+        t0 = time.perf_counter_ns()
+        try:
+            return decode(*a, **kw)
+        finally:
+            record_ns(time.perf_counter_ns() - t0)
+
+    return timed
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,63 @@
+"""Dashboard tests: BENCH_report.json -> self-contained HTML with one
+sparkline per rate series and markers on jax-version changes."""
+import json
+
+from repro.bench.dashboard import main as dashboard_main
+from repro.bench.dashboard import render_dashboard, write_dashboard
+from repro.bench.report import report_payload
+
+from _bench_factories import nm, record
+
+
+def _runs():
+    return [
+        record("r1", [nm(name="leg_rate", params={"k_per_device": 8},
+                         updates_per_sec=100.0)]),
+        record("r2", [nm(name="leg_rate", params={"k_per_device": 8},
+                         updates_per_sec=150.0)], ts="2026-08-02"),
+    ]
+
+
+def test_render_contains_series_and_sparkline():
+    html = render_dashboard(report_payload(_runs()))
+    assert "<svg" in html and "polyline" in html
+    assert "leg_rate" in html
+    assert "2 run(s)" in html
+    # rates appear formatted
+    assert "150" in html
+
+
+def test_jax_version_change_marked():
+    runs = _runs()
+    runs[1].jax_version = "0.5.0"
+    runs[0].jax_version = "0.4.37"
+    html = render_dashboard(report_payload(runs))
+    assert "jax 0.4.37 -&gt; 0.5.0" in html or "jax 0.4.37 -> 0.5.0" in html
+
+
+def test_no_marker_when_version_stable():
+    html = render_dashboard(report_payload(_runs()))
+    assert 'fill="#d95f0e"' not in html  # no change-marker circles
+
+
+def test_single_point_series_renders():
+    html = render_dashboard(report_payload(_runs()[:1]))
+    assert "<svg" in html
+
+
+def test_empty_payload_renders_placeholder():
+    html = render_dashboard({"schema_version": 1, "n_runs": 0, "window": 5,
+                             "series": []})
+    assert "no rate measurements" in html
+
+
+def test_write_and_cli_round_trip(tmp_path):
+    payload = report_payload(_runs())
+    report_path = tmp_path / "BENCH_report.json"
+    report_path.write_text(json.dumps(payload))
+    out = tmp_path / "sub" / "dashboard.html"
+    assert dashboard_main(["--report", str(report_path),
+                           "--out", str(out)]) == 0
+    html = out.read_text()
+    assert html == render_dashboard(payload)
+    assert write_dashboard(payload, str(out)) == str(out)

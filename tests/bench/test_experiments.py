@@ -22,7 +22,7 @@ def test_sections_tuple_matches_run_py():
 
     assert RUN_SECTIONS == SECTIONS == (
         "hier", "kernels", "embed", "scaling", "cascade_kernel", "serve",
-        "fleet", "query",
+        "fleet", "query", "obs",
     )
 
 

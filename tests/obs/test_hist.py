@@ -1,0 +1,212 @@
+"""Unit + property suite for ``repro.obs.hist``.
+
+The load-bearing contract is *exact count conservation*: every
+``record()`` lands in exactly one bucket, concurrent writers lose
+nothing, and ``merge_states`` is an associative/commutative monoid over
+bucket states — so a fleet-wide merged distribution carries exactly the
+sum of every worker's events, in any merge order.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.obs import hist
+from repro.obs.hist import (
+    NUM_BUCKETS,
+    LatencyHistogram,
+    bucket_index,
+    bucket_upper_bound,
+    merge_state_maps,
+    merge_states,
+    state_count,
+    state_percentile,
+    summarize_state,
+)
+
+
+# ---------------------------------------------------------------------------
+# bucket scheme
+# ---------------------------------------------------------------------------
+
+def test_bucket_index_covers_int64_range():
+    assert bucket_index(0) == 0
+    assert bucket_index(-5) == 0  # clock skew clamps to bucket 0, not a crash
+    assert bucket_index(1) == 1
+    assert bucket_index(2) == 2
+    assert bucket_index(3) == 2
+    assert bucket_index(4) == 3
+    # bucket i holds (2**(i-1), 2**i - 1]: upper bound is inclusive
+    for i in range(1, 63):
+        assert bucket_index(bucket_upper_bound(i)) == i
+        assert bucket_index(bucket_upper_bound(i) + 1) == i + 1
+    assert bucket_index(2**63 - 1) == 63
+    assert bucket_index(2**200) == 63  # saturates, never IndexErrors
+
+
+def test_bucket_upper_bounds_monotone():
+    bounds = [bucket_upper_bound(i) for i in range(NUM_BUCKETS)]
+    assert bounds[0] == 0
+    assert all(b < a for b, a in zip(bounds, bounds[1:]))
+
+
+# ---------------------------------------------------------------------------
+# conservation
+# ---------------------------------------------------------------------------
+
+def test_single_thread_count_conservation():
+    h = LatencyHistogram()
+    values = [0, 1, 1, 7, 8, 1000, 2**40, 2**62]
+    for v in values:
+        h.record(v)
+    assert h.count == len(values)
+    assert int(h.counts().sum()) == len(values)
+    assert h.max_ns == 2**62
+
+
+def test_concurrent_writers_lose_nothing():
+    """N threads x M records each: the per-thread shard design means no
+    read-modify-write ever races, so the total is exact — not merely
+    approximate — after the writers quiesce."""
+    h = LatencyHistogram()
+    n_threads, per_thread = 8, 5000
+    rngs = [np.random.default_rng(s) for s in range(n_threads)]
+
+    def writer(rng):
+        for v in rng.integers(0, 2**30, per_thread):
+            h.record(int(v))
+
+    threads = [threading.Thread(target=writer, args=(r,)) for r in rngs]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert h.count == n_threads * per_thread
+    assert int(h.counts().sum()) == n_threads * per_thread
+    want_max = max(int(r.integers(0, 2**30, per_thread).max())
+                   for r in (np.random.default_rng(s) for s in range(n_threads)))
+    assert h.max_ns == want_max
+
+
+# ---------------------------------------------------------------------------
+# merge algebra (property-based)
+# ---------------------------------------------------------------------------
+
+def _random_state(rng_seed: int):
+    rng = np.random.default_rng(rng_seed)
+    counts = rng.integers(0, 50, NUM_BUCKETS)
+    # zero out a random suffix so empty-tail states appear too
+    counts[int(rng.integers(0, NUM_BUCKETS)):] = 0
+    nonzero = np.flatnonzero(counts)
+    max_ns = int(bucket_upper_bound(int(nonzero[-1]))) if len(nonzero) else 0
+    return {"counts": counts.tolist(), "max_ns": max_ns}
+
+
+@settings(deadline=None, max_examples=50)
+@given(sa=st.integers(0, 10_000), sb=st.integers(0, 10_000))
+def test_merge_commutative(sa, sb):
+    a, b = _random_state(sa), _random_state(sb)
+    assert merge_states(a, b) == merge_states(b, a)
+
+
+@settings(deadline=None, max_examples=50)
+@given(sa=st.integers(0, 10_000), sb=st.integers(0, 10_000),
+       sc=st.integers(0, 10_000))
+def test_merge_associative(sa, sb, sc):
+    a, b, c = _random_state(sa), _random_state(sb), _random_state(sc)
+    assert (merge_states(merge_states(a, b), c)
+            == merge_states(a, merge_states(b, c)))
+
+
+@settings(deadline=None, max_examples=50)
+@given(sa=st.integers(0, 10_000), sb=st.integers(0, 10_000))
+def test_merge_conserves_counts_and_max(sa, sb):
+    a, b = _random_state(sa), _random_state(sb)
+    m = merge_states(a, b)
+    assert state_count(m) == state_count(a) + state_count(b)
+    assert m["max_ns"] == max(a["max_ns"], b["max_ns"])
+
+
+def test_merge_identity_is_empty_state():
+    a = _random_state(3)
+    zero = {"counts": [0] * NUM_BUCKETS, "max_ns": 0}
+    assert merge_states(a, zero) == a
+    assert merge_states(zero, a) == a
+
+
+def test_merge_rejects_bucket_mismatch():
+    a = _random_state(1)
+    short = {"counts": [1] * 8, "max_ns": 3}
+    with pytest.raises(ValueError):
+        merge_states(a, short)
+
+
+def test_merge_state_maps_is_union():
+    m1 = {"x": _random_state(1), "shared": _random_state(2)}
+    m2 = {"y": _random_state(3), "shared": _random_state(4)}
+    merged = merge_state_maps([m1, m2])
+    assert set(merged) == {"x", "y", "shared"}
+    assert merged["x"] == m1["x"]
+    assert merged["y"] == m2["y"]
+    assert (state_count(merged["shared"])
+            == state_count(m1["shared"]) + state_count(m2["shared"]))
+
+
+# ---------------------------------------------------------------------------
+# percentiles and summaries
+# ---------------------------------------------------------------------------
+
+def test_percentile_empty_and_bounds():
+    empty = {"counts": [0] * NUM_BUCKETS, "max_ns": 0}
+    assert state_percentile(empty, 0.5) is None
+    with pytest.raises(ValueError):
+        state_percentile(_random_state(0), 0.0)
+    with pytest.raises(ValueError):
+        state_percentile(_random_state(0), 1.5)
+
+
+def test_percentile_single_value_is_exactly_it():
+    h = LatencyHistogram()
+    h.record(1000)
+    st_ = h.state()
+    # one sample: every quantile answers with the clamped max — the exact
+    # recorded value, not the bucket's (larger) upper bound
+    for q in (0.5, 0.9, 0.99, 1.0):
+        assert state_percentile(st_, q) == 1000
+
+
+def test_percentile_clamped_to_observed_max():
+    h = LatencyHistogram()
+    for v in (10, 20, 1025):  # 1025 lands in the (1024, 2047] bucket
+        h.record(v)
+    assert state_percentile(h.state(), 0.99) == 1025  # not 2047
+
+
+def test_summary_all_ints_json_bit_exact():
+    h = LatencyHistogram()
+    rng = np.random.default_rng(7)
+    for v in rng.integers(0, 2**35, 1000):
+        h.record(int(v))
+    s = summarize_state(h.state())
+    assert set(s) == {"count", "p50_ns", "p90_ns", "p99_ns", "max_ns"}
+    assert all(type(v) is int for v in s.values())
+    assert json.loads(json.dumps(s)) == s  # integers survive JSON exactly
+    assert s["p50_ns"] <= s["p90_ns"] <= s["p99_ns"] <= s["max_ns"]
+    assert s == h.summary()  # instance summary == state summary, same dump
+
+
+def test_state_json_round_trip_bit_exact():
+    h = LatencyHistogram()
+    for v in (1, 5, 5, 123456, 2**50):
+        h.record(v)
+    st_ = h.state()
+    back = json.loads(json.dumps(st_))
+    assert back == st_
+    assert summarize_state(back) == summarize_state(st_)

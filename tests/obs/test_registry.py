@@ -1,0 +1,179 @@
+"""Unit suite for ``repro.obs.registry``: the per-process metrics surface.
+
+Covers the get-or-create identity contract, concurrent counter exactness,
+the dump/merge path the fleet scrape rides on, the Prometheus text
+exposition, and the env-gated disabled path (``from_env`` must return
+``None`` — not an inert registry — so call sites compile down to one
+``is not None`` check).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs import (
+    OBS_ENV_VAR,
+    MetricsRegistry,
+    dump_to_prometheus,
+    env_enabled,
+)
+from repro.obs.hist import NUM_BUCKETS, state_count
+
+
+# ---------------------------------------------------------------------------
+# identity + concurrency
+# ---------------------------------------------------------------------------
+
+def test_get_or_create_returns_same_instrument():
+    r = MetricsRegistry()
+    assert r.counter("a") is r.counter("a")
+    assert r.gauge("g") is r.gauge("g")
+    assert r.histogram("h") is r.histogram("h")
+
+
+def test_counter_concurrent_increments_exact():
+    r = MetricsRegistry()
+    c = r.counter("hits")
+    n_threads, per_thread = 8, 20_000
+
+    def bump():
+        for _ in range(per_thread):
+            c.inc()
+
+    threads = [threading.Thread(target=bump) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == n_threads * per_thread
+
+
+def test_counter_inc_n():
+    r = MetricsRegistry()
+    r.counter("c").inc(5)
+    r.counter("c").inc(7)
+    assert r.counter("c").value == 12
+
+
+def test_gauge_last_write_wins():
+    r = MetricsRegistry()
+    g = r.gauge("depth")
+    g.set(3)
+    g.set(1.5)
+    assert r.dump()["gauges"]["depth"] == 1.5
+
+
+# ---------------------------------------------------------------------------
+# dump + merge (the fleet scrape path)
+# ---------------------------------------------------------------------------
+
+def _loaded_registry(seed: int) -> MetricsRegistry:
+    r = MetricsRegistry()
+    rng = np.random.default_rng(seed)
+    r.counter("events").inc(int(rng.integers(1, 100)))
+    r.gauge("depth").set(float(rng.integers(0, 10)))
+    h = r.histogram("lat")
+    for v in rng.integers(0, 2**20, 200):
+        h.record(int(v))
+    return r
+
+
+def test_dump_is_plain_json_types():
+    d = _loaded_registry(0).dump()
+    assert set(d) == {"counters", "gauges", "histograms"}
+    assert all(type(v) is int for v in d["counters"].values())
+    assert all(type(v) is float for v in d["gauges"].values())
+    st = d["histograms"]["lat"]
+    assert type(st["max_ns"]) is int
+    assert len(st["counts"]) == NUM_BUCKETS
+    assert all(type(c) is int for c in st["counts"])
+
+
+def test_merge_dumps_conserves_everything():
+    regs = [_loaded_registry(s) for s in range(3)]
+    dumps = [r.dump() for r in regs]
+    merged = MetricsRegistry.merge_dumps(dumps)
+    assert merged["counters"]["events"] == sum(
+        d["counters"]["events"] for d in dumps
+    )
+    assert merged["gauges"]["depth"] == sum(
+        d["gauges"]["depth"] for d in dumps
+    )
+    assert state_count(merged["histograms"]["lat"]) == sum(
+        state_count(d["histograms"]["lat"]) for d in dumps
+    )
+    assert merged["histograms"]["lat"]["max_ns"] == max(
+        d["histograms"]["lat"]["max_ns"] for d in dumps
+    )
+
+
+def test_merge_dumps_union_of_names():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("only_a").inc(1)
+    b.counter("only_b").inc(2)
+    merged = MetricsRegistry.merge_dumps([a.dump(), b.dump()])
+    assert merged["counters"] == {"only_a": 1, "only_b": 2}
+
+
+def test_merge_dumps_empty_is_empty():
+    merged = MetricsRegistry.merge_dumps([])
+    assert merged == {"counters": {}, "gauges": {}, "histograms": {}}
+
+
+# ---------------------------------------------------------------------------
+# prometheus exposition
+# ---------------------------------------------------------------------------
+
+def test_prometheus_text_shape():
+    r = MetricsRegistry()
+    r.counter("router.drops").inc(3)
+    r.gauge("router.queue_depth").set(2)
+    h = r.histogram("serve.update_dispatch_ns")
+    h.record(100)
+    h.record(100000)
+    text = r.to_prometheus()
+    assert "# TYPE repro_router_drops counter" in text
+    assert "repro_router_drops 3" in text
+    assert "repro_router_queue_depth 2" in text
+    # cumulative buckets end at +Inf with the total count
+    assert 'repro_serve_update_dispatch_ns_bucket{le="+Inf"} 2' in text
+    assert "repro_serve_update_dispatch_ns_count 2" in text
+    assert "repro_serve_update_dispatch_ns_max_ns 100000" in text
+    assert text.endswith("\n")
+    # any holder of the same dump renders the identical text
+    assert dump_to_prometheus(r.dump()) == text
+
+
+def test_prometheus_bucket_counts_cumulative():
+    r = MetricsRegistry()
+    h = r.histogram("h")
+    for v in (1, 1, 3, 7):  # buckets 1, 1, 2, 3
+        h.record(v)
+    text = r.to_prometheus()
+    assert 'repro_h_bucket{le="1"} 2' in text
+    assert 'repro_h_bucket{le="3"} 3' in text
+    assert 'repro_h_bucket{le="7"} 4' in text
+
+
+# ---------------------------------------------------------------------------
+# env gate: the disabled path is None, not a no-op object
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("val", ["1", "true", "YES", "on"])
+def test_env_enabled_truthy(val):
+    assert env_enabled({OBS_ENV_VAR: val})
+
+
+@pytest.mark.parametrize("val", ["", "0", "false", "off", "no"])
+def test_env_enabled_falsy(val):
+    assert not env_enabled({OBS_ENV_VAR: val})
+
+
+def test_from_env_disabled_returns_none():
+    assert MetricsRegistry.from_env({}) is None
+    assert MetricsRegistry.from_env({OBS_ENV_VAR: "0"}) is None
+
+
+def test_from_env_enabled_returns_registry():
+    r = MetricsRegistry.from_env({OBS_ENV_VAR: "1"})
+    assert isinstance(r, MetricsRegistry)

@@ -1,0 +1,47 @@
+"""Unit suite for ``repro.obs.trace``: the bounded span ring."""
+import json
+
+from repro.obs import TraceRing, jax_profile
+
+
+def test_ring_keeps_newest_capacity_events():
+    ring = TraceRing(capacity=4)
+    for i in range(10):
+        ring.append("stage", t0_ns=i, t1_ns=i + 1, idx=i)
+    events = ring.events()
+    assert ring.total == 10
+    assert len(events) == 4
+    assert [e["idx"] for e in events] == [6, 7, 8, 9]  # oldest first
+    assert all(e["stage"] == "stage" for e in events)
+
+
+def test_span_records_duration_and_fields():
+    ring = TraceRing()
+    with ring.span("update", batch=128, worker="3"):
+        pass
+    (e,) = ring.events()
+    assert e["stage"] == "update"
+    assert e["batch"] == 128
+    assert e["worker"] == "3"
+    assert e["t1_ns"] >= e["t0_ns"]
+
+
+def test_dump_jsonl_round_trips(tmp_path):
+    ring = TraceRing(capacity=8)
+    for i in range(5):
+        ring.append("publish", t0_ns=100 * i, t1_ns=100 * i + 50, records=i)
+    path = tmp_path / "trace.jsonl"
+    n = ring.dump_jsonl(path)
+    assert n == 5
+    lines = path.read_text().splitlines()
+    assert len(lines) == 5
+    back = [json.loads(ln) for ln in lines]
+    assert back == ring.events()
+
+
+def test_jax_profile_noop_when_disabled():
+    # falsy log_dir: must be a true no-op, not a profiler start
+    with jax_profile(None):
+        pass
+    with jax_profile(""):
+        pass
